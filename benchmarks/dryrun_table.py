@@ -1,0 +1,48 @@
+"""Render experiments/dryrun/*.json into the §Dry-run markdown table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+
+def main() -> None:
+    from repro.configs import ASSIGNED
+    from repro.configs.base import SHAPES
+
+    lines = [
+        "| arch | shape | mesh | status | FLOPs/dev | bytes/dev | coll bytes/dev "
+        "| peak mem/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    counts = {"ok": 0, "skipped": 0, "other": 0}
+    for mesh in ("single", "multi"):
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                p = DRYRUN / f"{mesh}_{arch}_{shape}.json"
+                if not p.exists():
+                    continue
+                d = json.loads(p.read_text())
+                counts[d["status"] if d["status"] in counts else "other"] += 1
+                if d["status"] != "ok":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | {d['status']} | — | — | — | — | — |"
+                    )
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {d['flops_per_device']:.2e} | "
+                    f"{d['bytes_per_device']:.2e} | {d['collectives'].get('total', 0):.2e} | "
+                    f"{d['peak_memory_per_device']/1e9:.1f} GB | {d['seconds']:.0f} |"
+                )
+    out = "\n".join(lines) + (
+        f"\n\ntotals: {counts['ok']} ok, {counts['skipped']} designed skips, "
+        f"{counts['other']} other\n"
+    )
+    (ROOT / "experiments" / "dryrun_table.md").write_text(out)
+    print(out[-400:])
+
+
+if __name__ == "__main__":
+    main()

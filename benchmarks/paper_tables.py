@@ -1,0 +1,275 @@
+"""Paper-table benchmarks: one function per table/figure of the paper.
+
+Tables 3-6  per-dataset performance (ALPACA / GSM8K / HUMANEVAL / SUM)
+Table 7     latency percentiles across all datasets
+Table 8     component ablation
+Table 9     fixed speculation depth comparison
+Fig 3/4     concurrency scaling (latency percentiles + throughput)
+
+Every row runs the REAL control plane (FlowGuard / SpecuStream /
+StreamScheduler) inside the discrete-event simulator, 80 queries per
+dataset at the high-demand operating point (Poisson λ=10/s), exactly the
+paper's evaluation shape.  Results are written to experiments/benchmarks/
+as JSON and rendered as markdown for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+import pathlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.workloads import sample_requests
+from repro.serving.simulator import (
+    ServeSimulator,
+    SimConfig,
+    streamserve_config,
+    vllm_dp_config,
+    vllm_tp_config,
+)
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "benchmarks"
+DATASETS = ("alpaca", "gsm8k", "humaneval", "sum")
+ARRIVAL_RATE = 10.0
+N_QUERIES = 80
+ARCH = "llama2-7b"
+
+
+def _run(config: SimConfig, workload: str, *, seed: int = 0,
+         arrival_rate: Optional[float] = ARRIVAL_RATE, n: int = N_QUERIES,
+         arch: str = ARCH) -> Dict[str, float]:
+    cfg = get_config(arch)
+    reqs = sample_requests(workload, n, seed=seed, arrival_rate=arrival_rate)
+    sim = ServeSimulator(cfg, copy.deepcopy(config))
+    return sim.run(reqs)
+
+
+def _avg(rows: List[Dict[str, float]]) -> Dict[str, float]:
+    keys = rows[0].keys()
+    return {k: float(np.mean([r[k] for r in rows])) for k in keys}
+
+
+SYSTEMS: Dict[str, Callable[[], SimConfig]] = {
+    "vLLM-Data-Parallel": vllm_dp_config,
+    "vLLM-Tensor-Parallel": vllm_tp_config,
+    "StreamServe": streamserve_config,
+}
+
+
+# ---------------------------------------------------------------------------
+# Tables 3-6: per-dataset comparison
+# ---------------------------------------------------------------------------
+
+
+def tables_3_to_6() -> Dict[str, Dict[str, Dict[str, float]]]:
+    out: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for ds in DATASETS:
+        out[ds] = {}
+        for sys_name, mk in SYSTEMS.items():
+            s = _run(mk(), ds)
+            out[ds][sys_name] = {
+                "tokens_per_s": s["throughput_mean"],
+                "latency_s": s["latency_mean"],
+                "tpot_s": s["tpot_mean"],
+                "p99_s": s["latency_p99"],
+                "aggregate_tput": s["aggregate_tput"],
+            }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 7: latency percentiles pooled over all datasets
+# ---------------------------------------------------------------------------
+
+
+def table_7() -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for sys_name, mk in SYSTEMS.items():
+        pooled: List[Dict[str, float]] = []
+        for ds in DATASETS:
+            pooled.append(_run(mk(), ds))
+        out[sys_name] = {
+            "p50": float(np.mean([r["latency_p50"] for r in pooled])),
+            "p90": float(np.mean([r["latency_p90"] for r in pooled])),
+            "p95": float(np.mean([r["latency_p95"] for r in pooled])),
+            "p99": float(np.mean([r["latency_p99"] for r in pooled])),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 8: ablation (averaged over the four datasets)
+# ---------------------------------------------------------------------------
+
+
+def _ablation_configs() -> Dict[str, SimConfig]:
+    return {
+        "StreamServe (Full)": streamserve_config(),
+        "w/ Round-Robin": streamserve_config(router="roundrobin"),
+        "w/o SpecuStream": streamserve_config(speculative=False),
+        "w/ Monolithic Engine": SimConfig(
+            mode="monolithic", n_workers=2, lane_chips=2, router="flowguard",
+            speculative=True, adaptive=True, max_batch=32,
+        ),
+        "w/o NIXL (Std. P2P)": streamserve_config(nixl=False),
+        "w/o FlowGuard": streamserve_config(router="random"),
+        "w/o SpecuStream Adapt": streamserve_config(adaptive=False, fixed_depth=5),
+        "w/o FlowGuard/Specu": streamserve_config(router="random", speculative=False),
+    }
+
+
+ABLATION_RATE = 30.0  # near StreamServe's knee: routing/disaggregation
+                      # quality only differentiates under real pressure
+
+
+def table_8() -> Dict[str, Dict[str, float]]:
+    """Ablation on the MIXED multi-tenant trace (all four suites
+    interleaved, 3 seeds) — deployment traffic, where the routing and
+    disaggregation signals actually bind."""
+    from repro.data.workloads import sample_mixed
+
+    cfg = get_config(ARCH)
+    out: Dict[str, Dict[str, float]] = {}
+    for name, conf in _ablation_configs().items():
+        rows = []
+        for seed in (0, 1, 2):
+            reqs = sample_mixed(20, seed=seed, arrival_rate=ABLATION_RATE)
+            sim = ServeSimulator(cfg, copy.deepcopy(conf))
+            rows.append(sim.run(reqs))
+        avg = _avg(rows)
+        out[name] = {
+            "tokens_per_s": avg["throughput_mean"],
+            "latency_s": avg["latency_mean"],
+            "tpot_s": avg["tpot_mean"],
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 9: fixed speculation depth comparison
+# ---------------------------------------------------------------------------
+
+
+def table_9() -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, SimConfig] = {
+        "vLLM-TP (no spec)": vllm_tp_config(),
+        "vLLM-TP + Spec (d=3)": vllm_tp_config(speculative=True, fixed_depth=3),
+        "vLLM-TP + Spec (d=5)": vllm_tp_config(speculative=True, fixed_depth=5),
+        "vLLM-TP + Spec (d=7)": vllm_tp_config(speculative=True, fixed_depth=7),
+        "StreamServe (adaptive)": streamserve_config(),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for name, conf in rows.items():
+        res = [_run(copy.deepcopy(conf), ds) for ds in DATASETS]
+        avg = _avg(res)
+        out[name] = {
+            "tokens_per_s": avg["throughput_mean"],
+            "latency_s": avg["latency_mean"],
+            "tpot_s": avg["tpot_mean"],
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Figures 3/4: concurrency scaling
+# ---------------------------------------------------------------------------
+
+
+def concurrency_sweep(
+    levels: Tuple[int, ...] = (1, 2, 5, 10, 15, 20, 30, 40, 50),
+) -> Dict[str, List[Dict[str, float]]]:
+    """Closed-loop concurrency: `c` requests in flight continuously (the
+    paper's Fig 3/4 x-axis).  Modelled as a burst of c·4 requests with
+    arrivals spread to hold ~c in flight."""
+    out: Dict[str, List[Dict[str, float]]] = {}
+    for sys_name, mk in SYSTEMS.items():
+        rows = []
+        for c in levels:
+            # hold ~c in flight: submit 4 waves of c in a tight burst
+            s = _run(
+                mk(), "gsm8k", arrival_rate=None, n=4 * c, seed=c,
+            )
+            rows.append(
+                dict(concurrency=c, latency_p50=s["latency_p50"],
+                     latency_p99=s["latency_p99"], latency_mean=s["latency_mean"],
+                     aggregate_tput=s["aggregate_tput"])
+            )
+        out[sys_name] = rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def render_markdown(results: Dict) -> str:
+    lines: List[str] = []
+    for ds in DATASETS:
+        lines.append(f"\n### {ds.upper()} (paper Table {3 + DATASETS.index(ds)})\n")
+        lines.append("| Architecture | Tokens/s | Latency (s) | TPOT (s/token) |")
+        lines.append("|---|---|---|---|")
+        for sys_name, row in results["tables_3_6"][ds].items():
+            lines.append(
+                f"| {sys_name} | {row['tokens_per_s']:.0f} | "
+                f"{row['latency_s']:.2f} | {row['tpot_s']:.5f} |"
+            )
+    lines.append("\n### Latency percentiles (paper Table 7)\n")
+    lines.append("| Architecture | p50 | p90 | p95 | p99 |")
+    lines.append("|---|---|---|---|---|")
+    for sys_name, row in results["table_7"].items():
+        lines.append(
+            f"| {sys_name} | {row['p50']:.2f} | {row['p90']:.2f} | "
+            f"{row['p95']:.2f} | {row['p99']:.2f} |"
+        )
+    lines.append("\n### Ablation (paper Table 8)\n")
+    lines.append("| Config | Avg Tput | Avg Latency | Avg TPOT |")
+    lines.append("|---|---|---|---|")
+    for name, row in results["table_8"].items():
+        lines.append(
+            f"| {name} | {row['tokens_per_s']:.0f} | {row['latency_s']:.3f} | "
+            f"{row['tpot_s']:.5f} |"
+        )
+    lines.append("\n### Fixed speculation depth (paper Table 9)\n")
+    lines.append("| Config | Avg Tput | Avg Latency | Avg TPOT |")
+    lines.append("|---|---|---|---|")
+    for name, row in results["table_9"].items():
+        lines.append(
+            f"| {name} | {row['tokens_per_s']:.0f} | {row['latency_s']:.3f} | "
+            f"{row['tpot_s']:.5f} |"
+        )
+    lines.append("\n### Concurrency scaling (paper Figs 3/4)\n")
+    lines.append("| System | c | p50 (s) | p99 (s) | agg tokens/s |")
+    lines.append("|---|---|---|---|---|")
+    for sys_name, rows in results["concurrency"].items():
+        for r in rows:
+            lines.append(
+                f"| {sys_name} | {r['concurrency']} | {r['latency_p50']:.2f} | "
+                f"{r['latency_p99']:.2f} | {r['aggregate_tput']:.0f} |"
+            )
+    return "\n".join(lines)
+
+
+def run_all(out_dir: Optional[pathlib.Path] = None) -> Dict:
+    out_dir = out_dir or RESULTS_DIR
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = {
+        "tables_3_6": tables_3_to_6(),
+        "table_7": table_7(),
+        "table_8": table_8(),
+        "table_9": table_9(),
+        "concurrency": concurrency_sweep(),
+    }
+    (out_dir / "paper_tables.json").write_text(json.dumps(results, indent=2))
+    md = render_markdown(results)
+    (out_dir / "paper_tables.md").write_text(md)
+    print(md)
+    return results
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,0 +1,46 @@
+"""Benchmark entrypoint: one benchmark per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --tables   # paper tables only
+  PYTHONPATH=src python -m benchmarks.run --roofline # roofline only
+
+Outputs land in experiments/benchmarks/ and experiments/roofline.{json,md};
+EXPERIMENTS.md §Paper-tables / §Roofline summarise them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args(argv)
+    run_all = not (args.tables or args.roofline)
+
+    t0 = time.time()
+    if run_all or args.roofline:
+        print("=" * 70)
+        print("ROOFLINE (from dry-run artifacts)")
+        print("=" * 70)
+        from benchmarks import roofline
+
+        roofline.main()
+
+    if run_all or args.tables:
+        print("=" * 70)
+        print("PAPER TABLES 3-9 + CONCURRENCY FIGURES")
+        print("=" * 70)
+        from benchmarks import paper_tables
+
+        paper_tables.run_all()
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Speculation-depth study: sweep fixed depths against SpecuStream on each
+workload — the paper's Table 9 mechanism, per-suite.
+
+  PYTHONPATH=src python examples/spec_depth_study.py
+"""
+import copy
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.workloads import sample_requests
+from repro.serving.simulator import ServeSimulator, streamserve_config
+
+
+def main():
+    cfg = get_config("llama2-7b")
+    depths = [0, 2, 3, 5, 8, 12, 20]
+    print(f"{'workload':10s} " + " ".join(f"d={d:<4d}" for d in depths) + " adaptive")
+    for wl in ("alpaca", "gsm8k", "humaneval", "sum"):
+        row = []
+        for d in depths:
+            conf = streamserve_config(
+                speculative=d > 0, adaptive=False, fixed_depth=d
+            )
+            sim = ServeSimulator(cfg, conf)
+            s = sim.run(sample_requests(wl, 80, seed=0, arrival_rate=10.0))
+            row.append(s["throughput_mean"])
+        conf = streamserve_config()
+        sim = ServeSimulator(cfg, copy.deepcopy(conf))
+        s = sim.run(sample_requests(wl, 80, seed=0, arrival_rate=10.0))
+        ada = s["throughput_mean"]
+        best_fixed = max(row[1:])
+        print(
+            f"{wl:10s} " + " ".join(f"{x:6.0f}" for x in row)
+            + f" {ada:8.0f}   (adaptive vs best fixed: {ada/best_fixed:+.0%})"
+        )
+    print("\nhigher-acceptance suites (sum) reward deeper speculation; "
+          "volatile suites (gsm8k) punish it — adaptive tracks both.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Fault-tolerant training example: checkpoint/restart with a mid-run crash,
+gradient compression, and bit-identical recovery.
+
+  PYTHONPATH=src python examples/train_resilient.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def run():
+    base = tempfile.mkdtemp(prefix="repro_train_")
+    try:
+        print("=" * 70)
+        print("run A: uninterrupted 30 steps")
+        print("=" * 70)
+        a = train_main([
+            "--arch", "mamba2-2.7b", "--steps", "30",
+            "--ckpt-dir", f"{base}/a", "--ckpt-every", "10",
+        ])
+
+        print("\n" + "=" * 70)
+        print("run B: crash injected at step 17, restored from step 10")
+        print("=" * 70)
+        b = train_main([
+            "--arch", "mamba2-2.7b", "--steps", "30",
+            "--ckpt-dir", f"{base}/b", "--ckpt-every", "10", "--fail-at", "17",
+        ])
+
+        print("\n" + "=" * 70)
+        print("run C: int8 gradient compression w/ error feedback")
+        print("=" * 70)
+        c = train_main([
+            "--arch", "mamba2-2.7b", "--steps", "30",
+            "--ckpt-dir", f"{base}/c", "--ckpt-every", "10", "--compress-grads",
+        ])
+
+        print(f"\nfinal losses: A={a['final_loss']:.4f}  B={b['final_loss']:.4f}  "
+              f"C={c['final_loss']:.4f}")
+        assert abs(a["final_loss"] - b["final_loss"]) < 1e-4, (
+            "crash-restart must replay to the identical state"
+        )
+        assert abs(a["final_loss"] - c["final_loss"]) < 0.1, (
+            "int8-compressed training must track the fp32 run"
+        )
+        print("OK: restart is bit-deterministic; compression tracks fp32")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,293 @@
+"""Architecture + shape configuration system for the StreamServe reproduction.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`.  Configs are
+pure data (frozen dataclasses) so they can be hashed into jit caches and
+serialised into experiment manifests.
+
+Families
+--------
+``dense``   decoder-only transformer (GQA attention + MLP)
+``ssm``     attention-free state-space model (Mamba2 / SSD)
+``moe``     decoder-only transformer with mixture-of-experts MLP
+``hybrid``  interleaved Mamba + attention layers, optionally MoE (Jamba)
+``vlm``     dense decoder with a vision frontend stub (patch embeddings)
+``audio``   encoder-decoder transformer with an audio frontend stub
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts configuration."""
+
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    # Apply MoE every `every_n` layers (1 = every layer).  Jamba uses 2.
+    every_n: int = 1
+    # Router jitter / z-loss co-efficients (training only).
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD — state space duality) configuration."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk_size: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB — input_specs() provides precomputed embeddings.
+
+    ``n_tokens`` is the number of frame/patch embeddings prepended to the text
+    sequence; the embeddings arrive already projected to ``d_model``.
+    """
+
+    kind: str  # "vision" | "audio"
+    n_tokens: int = 256
+
+
+# ---------------------------------------------------------------------------
+# Main config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | ssm | moe | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # --- attention variants -------------------------------------------------
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # SWA window (tokens) or None
+    # hybrid: one attention layer every `attn_period` layers (rest are mamba)
+    attn_period: int = 0  # 0 = all attention (or all ssm for family == ssm)
+
+    # --- MLP variant ---------------------------------------------------------
+    mlp_type: str = "swiglu"  # swiglu | gelu
+
+    # --- optional subsystems -------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: Optional[FrontendConfig] = None
+    # encoder-decoder: number of encoder layers (0 = decoder-only)
+    n_encoder_layers: int = 0
+
+    # --- numerics / training -------------------------------------------------
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    optimizer: str = "adamw"  # adamw | adafloor (adafactor-style)
+    remat_policy: str = "minimal"  # none | minimal | full
+
+    # --- scan-over-layers block size (compile-time control) ------------------
+    # Layers are grouped into homogeneous blocks of this many layers and the
+    # stack is lax.scan'ed over blocks.  For hybrid archs this must equal
+    # attn_period so every block has the same internal structure.
+    scan_block: int = 1
+
+    # --- metadata -------------------------------------------------------------
+    source: str = ""
+    notes: str = ""
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def padded_heads(self) -> int:
+        """Query heads padded so attention shards on the 16-way model axis.
+
+        Megatron-style: pad the per-KV-group query count (G) until
+        ``K * G_pad`` divides 16 (40->48 for qwen2.5-14b, 36->48 for
+        starcoder2-7b).  Padded heads are masked to zero after attention
+        (models/attention.py) so forward AND backward semantics match the
+        unpadded model exactly; they only waste the pad fraction of
+        attention FLOPs (visible in the roofline useful-compute ratio).
+        """
+        H, K = self.n_heads, self.n_kv_heads
+        if H == 0 or H < 16 or H % 16 == 0:
+            return H
+        G_pad = H // K
+        while (K * G_pad) % 16:
+            G_pad += 1
+        return K * G_pad
+
+    @property
+    def padded_group(self) -> int:
+        """Queries per KV head including padding (padded layout is
+        group-major: head slot ``h`` is real iff ``h % padded_group < G``)."""
+        return self.padded_heads // self.n_kv_heads if self.n_kv_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding/LM head
+        shard evenly on a 16-way model axis (Megatron-style padding; the
+        padded logit columns are masked to -inf in ``unembed``)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode memory does NOT grow unboundedly with context.
+
+        SSM: constant state.  Hybrid: bounded by the sparse attention layers.
+        SWA: KV bounded by window.  Pure full-attention: False (long_500k is
+        skipped for those — see DESIGN.md §Arch-applicability).
+        """
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    @property
+    def has_decode_step(self) -> bool:
+        """Encoder-only models have no decode; all assigned archs decode."""
+        return True
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        return _count_params(self, active_only=False)
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        return _count_params(self, active_only=True)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Sequence of per-layer kinds: 'attn' or 'ssm'."""
+        if self.family == "ssm":
+            return tuple("ssm" for _ in range(self.n_layers))
+        if self.family == "hybrid" and self.attn_period > 0:
+            # one attention layer per `attn_period` block, placed at the end of
+            # the block (Jamba places attention mid-block; position within the
+            # block does not change cost or sharding).
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append("attn" if (i % self.attn_period) == (self.attn_period - 1) else "ssm")
+            return tuple(kinds)
+        return tuple("attn" for _ in range(self.n_layers))
+
+    def moe_layer_mask(self) -> Tuple[bool, ...]:
+        """True for layers whose MLP is MoE."""
+        if self.moe is None:
+            return tuple(False for _ in range(self.n_layers))
+        return tuple((i % self.moe.every_n) == (self.moe.every_n - 1) for i in range(self.n_layers))
+
+
+def _mlp_params(cfg: ArchConfig, d_ff: int) -> int:
+    if cfg.mlp_type == "swiglu":
+        return 3 * cfg.d_model * d_ff
+    return 2 * cfg.d_model * d_ff
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    q = cfg.d_model * cfg.n_heads * cfg.head_dim
+    kv = 2 * cfg.d_model * cfg.n_kv_heads * cfg.head_dim
+    o = cfg.n_heads * cfg.head_dim * cfg.d_model
+    return q + kv + o
+
+
+def _ssm_params(cfg: ArchConfig) -> int:
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    # in_proj produces [z, x, B, C, dt]
+    zxbcdt = d_in * 2 + 2 * s.n_groups * s.d_state + nh
+    in_proj = cfg.d_model * zxbcdt
+    conv = s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+    out_proj = d_in * cfg.d_model
+    extra = 3 * nh  # A_log, D, dt_bias
+    return in_proj + conv + out_proj + extra
+
+
+def _count_params(cfg: ArchConfig, active_only: bool) -> int:
+    total = cfg.vocab_size * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * cfg.d_model  # lm head
+
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    for i, kind in enumerate(kinds):
+        if kind == "attn":
+            total += _attn_params(cfg)
+        else:
+            total += _ssm_params(cfg)
+        # MLP (dense archs always have one except pure ssm with d_ff == 0)
+        if moe_mask[i]:
+            assert cfg.moe is not None
+            n_live = cfg.moe.top_k if active_only else cfg.moe.n_experts
+            total += n_live * _mlp_params(cfg, cfg.moe.d_ff_expert)
+            total += cfg.d_model * cfg.moe.n_experts  # router
+        elif cfg.d_ff > 0:
+            total += _mlp_params(cfg, cfg.d_ff)
+        total += 2 * cfg.d_model  # norms
+
+    if cfg.n_encoder_layers > 0:
+        # encoder layers: self-attn + mlp; decoder additionally has cross-attn
+        enc = cfg.n_encoder_layers * (_attn_params(cfg) + _mlp_params(cfg, cfg.d_ff) + 2 * cfg.d_model)
+        cross = cfg.n_layers * (_attn_params(cfg) + cfg.d_model)
+        total += enc + cross
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned to the LM-family pool)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell; reason if not."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode KV is unbounded (see DESIGN.md)"
+    if shape.kind == "decode" and not cfg.has_decode_step:
+        return False, "encoder-only arch has no decode step"
+    return True, ""

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: StreamScheduler, FlowGuard,
+PipeServe-Engine and SpecuStream (StreamServe §3)."""
+from repro.core.engine import EngineConfig, PipeServeEngine, StreamPair  # noqa: F401
+from repro.core.flowguard import FlowGuard, FlowGuardConfig, RoundRobinRouter  # noqa: F401
+from repro.core.metrics import PerformanceMonitor, RequestRecord, WorkerMetrics  # noqa: F401
+from repro.core.scheduler import StreamScheduler  # noqa: F401
+from repro.core.specustream import (  # noqa: F401
+    DEPTH_BUCKETS,
+    FixedSpeculation,
+    SpecDecision,
+    SpecuStream,
+    SpecuStreamConfig,
+)

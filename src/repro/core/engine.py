@@ -1,0 +1,399 @@
+"""PipeServe-Engine — disaggregated prefill/decode execution (paper §3.4,
+Alg 1 & 3), real JAX execution path.
+
+One :class:`StreamPair` = a prefill lane + a decode lane (on TPU: two
+submeshes linked by ICI resharding — the NIXL analogue; on this CPU container
+both lanes share the device and the transfer is the jitted ``insert`` below).
+The decode lane runs continuous batching over ``max_batch`` slots with
+SpecuStream-governed speculative flows.
+
+The engine is single-controller and fully deterministic given the request
+trace — which is what makes the control plane property-testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.flowguard import FlowGuard
+from repro.core.metrics import PerformanceMonitor, RequestRecord
+from repro.core.scheduler import StreamScheduler
+from repro.core.specustream import DEPTH_BUCKETS, SpecDecision, SpecuStream
+from repro.models import build_model
+from repro.serving.draft import ModelDraft, NGramDraft
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import sample
+from repro.serving.speculative import verify_tokens
+
+
+def _tree_insert(big, small, slot: jax.Array):
+    """Insert a batch-1 cache into slot ``slot`` of a batched cache.
+
+    Batched cache leaves are (n_blocks, B, ...) under "blocks" and (B,) at the
+    top level; prefill outputs have B = 1.
+    """
+
+    def ins(b, s):
+        if b.ndim >= 2 and s.ndim == b.ndim:  # (n_blocks, B, ...) leaves
+            return jax.lax.dynamic_update_index_in_dim(b, s[:, 0], slot, 1)
+        return jax.lax.dynamic_update_index_in_dim(b, s[0], slot, 0)  # (B,) leaves
+
+    return jax.tree.map(ins, big, small)
+
+
+class ModelLane:
+    """A model + per-slot batched decode cache + jitted step helpers."""
+
+    def __init__(self, cfg: ArchConfig, params, max_batch: int, max_len: int):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = self.model.init_cache(max_batch, max_len)
+        self._decode = jax.jit(self.model.decode_step)
+        self._commit = jax.jit(self.model.commit_cache)
+        self._insert = jax.jit(_tree_insert)
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=max_len)
+        )
+
+    def prefill(self, batch: Dict[str, Any]):
+        return self._prefill(self.params, batch)
+
+    def insert(self, slot: int, small_cache) -> None:
+        self.cache = self._insert(self.cache, small_cache, jnp.int32(slot))
+
+    def decode(self, tokens: jax.Array):
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        return logits
+
+    def commit(self, old_len: jax.Array, accept_idx: jax.Array) -> None:
+        self.cache = self._commit(self.cache, old_len, accept_idx)
+
+    @property
+    def lengths(self) -> jax.Array:
+        return self.cache["len"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    temperature: float = 0.0
+    kv_blocks: int = 4096
+    kv_block_size: int = 16
+    draft: str = "ngram"            # "ngram" | "model" | "none"
+    max_ngram: int = 4
+    adaptive: bool = True            # SpecuStream on (False => fixed depth)
+    fixed_depth: int = 5
+    spec_config: Any = None
+
+
+class StreamPair:
+    """One disaggregated prefill+decode lane pair (paper Alg 3)."""
+
+    def __init__(
+        self,
+        worker_id: int,
+        cfg: ArchConfig,
+        params,
+        econf: EngineConfig,
+        monitor: PerformanceMonitor,
+        draft_cfg: Optional[ArchConfig] = None,
+        draft_params=None,
+    ):
+        self.worker_id = worker_id
+        self.econf = econf
+        self.monitor = monitor
+        self.lane = ModelLane(cfg, params, econf.max_batch, econf.max_len)
+        self.kv = KVCacheManager(econf.kv_blocks, econf.kv_block_size)
+        if econf.adaptive:
+            self.spec = SpecuStream(econf.spec_config)
+        else:
+            from repro.core.specustream import FixedSpeculation
+
+            self.spec = FixedSpeculation(econf.fixed_depth)
+        self.draft_lane: Optional[ModelLane] = None
+        self.ngram: Optional[NGramDraft] = None
+        if econf.draft == "model":
+            assert draft_cfg is not None and draft_params is not None
+            self.draft_lane = ModelLane(draft_cfg, draft_params, econf.max_batch, econf.max_len)
+        elif econf.draft == "ngram":
+            self.ngram = NGramDraft(econf.max_ngram, cfg.vocab_size)
+        # slot state -----------------------------------------------------------
+        self.slot_req: List[Optional[Request]] = [None] * econf.max_batch
+        self.pending = np.zeros((econf.max_batch,), np.int64)
+        self.histories: List[List[int]] = [[] for _ in range(econf.max_batch)]
+        self.acceptance = 0.7  # optimistic prior
+        self.key = jax.random.PRNGKey(worker_id)
+        self.healthy = True
+
+    # --------------------------------------------------------------- helpers
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    @property
+    def load(self) -> float:
+        return len(self.active_slots()) / self.econf.max_batch
+
+    # ---------------------------------------------------------------- prefill
+    def admit(self, req: Request, now: float) -> bool:
+        """Prefill one request and transfer its KV into a free decode slot."""
+        slots = self.free_slots()
+        if not slots:
+            return False
+        alloc = self.kv.allocate_sequence(
+            req.request_id, list(req.prompt), extra_tokens=req.params.max_new_tokens
+        )
+        if alloc is None:
+            return False  # KV pool exhausted — stays queued
+        req.cache_hit_tokens = alloc.shared_blocks * self.kv.pool.block_size
+        slot = slots[0]
+        req.state = RequestState.PREFILLING
+        req.t_prefill_start = now
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": prompt}
+        last_logits, small_cache = self.lane.prefill(batch)
+        # --- KV transfer (NIXL analogue): insert into the decode lane --------
+        req.state = RequestState.TRANSFERRING
+        self.lane.insert(slot, small_cache)
+        if self.draft_lane is not None:
+            _, dsc = self.draft_lane.prefill(batch)
+            self.draft_lane.insert(slot, dsc)
+        self.key, sk = jax.random.split(self.key)
+        first = int(sample(sk, last_logits, self.econf.temperature)[0])
+        req.state = RequestState.DECODING
+        req.t_prefill_end = now
+        req.t_first_token = now
+        req.output_tokens.append(first)
+        req.token_times.append(now)
+        self.slot_req[slot] = req
+        self.pending[slot] = first
+        self.histories[slot] = list(req.prompt) + [first]
+        return True
+
+    # ----------------------------------------------------------------- decode
+    def decode_iteration(self, now: float) -> int:
+        """One continuous-batching decode step (speculative when enabled).
+        Returns number of tokens emitted across the batch."""
+        active = self.active_slots()
+        if not active:
+            return 0
+        B = self.econf.max_batch
+        decision: SpecDecision = self.spec.adapt(
+            self.acceptance,
+            self.load,
+            self.monitor.workers[self.worker_id].recent_throughput,
+        )
+        k = decision.bucket_depth
+        active_mask = np.zeros((B,), bool)
+        active_mask[active] = True
+
+        if k == 0:  # plain autoregressive step
+            tokens = jnp.asarray(self.pending, jnp.int32)[:, None]
+            logits = self.lane.decode(tokens)
+            self.lane.commit(self.lane.lengths - 1, jnp.zeros((B,), jnp.int32))
+            self.key, sk = jax.random.split(self.key)
+            nxt = np.asarray(sample(sk, logits[:, 0], self.econf.temperature))
+            emitted = 0
+            for s in active:
+                emitted += self._emit(s, [int(nxt[s])], now)
+            return emitted
+
+        # ---- draft proposal --------------------------------------------------
+        if self.draft_lane is not None:
+            draft_toks, draft_q = self._model_draft_propose(k)
+        else:
+            draft_toks, draft_q = self.ngram.propose(self.histories, k)
+        draft_toks = jnp.asarray(draft_toks, jnp.int32)
+        draft_q = jnp.asarray(draft_q, jnp.float32)
+
+        # ---- target verify step (T = k+1 tokens) ----------------------------
+        verify_in = jnp.concatenate(
+            [jnp.asarray(self.pending, jnp.int32)[:, None], draft_toks], axis=1
+        )
+        old_len = self.lane.lengths
+        logits = self.lane.decode(verify_in)  # (B, k+1, V)
+        self.key, sk = jax.random.split(self.key)
+        res = verify_tokens(
+            sk,
+            draft_toks,
+            draft_q,
+            logits,
+            active=jnp.asarray(active_mask),
+            temperature=self.econf.temperature,
+        )
+        n_acc = np.asarray(res.n_accepted)
+        nxt = np.asarray(res.next_token)
+        self.lane.commit(old_len, res.accept_idx)
+        if self.draft_lane is not None:
+            # draft ingested k tokens [pending, d_1..d_{k-1}]
+            self.draft_lane.commit(
+                self._draft_old_len, jnp.minimum(res.accept_idx, k - 1)
+            )
+        accepted_frac = float(n_acc[active].mean()) / max(k, 1)
+        self.acceptance = 0.8 * self.acceptance + 0.2 * accepted_frac
+
+        draft_np = np.asarray(draft_toks)
+        emitted = 0
+        for s in active:
+            toks = [int(t) for t in draft_np[s, : int(n_acc[s])]] + [int(nxt[s])]
+            emitted += self._emit(s, toks, now)
+        return emitted
+
+    def _model_draft_propose(self, k: int):
+        dl = self.draft_lane
+        self._draft_old_len = dl.lengths
+        toks, qs = [], []
+        cur = jnp.asarray(self.pending, jnp.int32)[:, None]
+        for _ in range(k):
+            self.key, sk = jax.random.split(self.key)
+            logits = dl.decode(cur)
+            from repro.serving.sampling import sample_probs
+
+            t, q = sample_probs(sk, logits[:, -1], self.econf.temperature)
+            toks.append(t)
+            qs.append(q)
+            cur = t[:, None]
+        # the k-th draft token was never ingested by the draft; commit handles
+        return jnp.stack(toks, 1), jnp.stack(qs, 1)
+
+    def _emit(self, slot: int, tokens: List[int], now: float) -> int:
+        req = self.slot_req[slot]
+        count = 0
+        for t in tokens:
+            if req.is_done():
+                break
+            req.output_tokens.append(t)
+            req.token_times.append(now)
+            self.histories[slot].append(t)
+            count += 1
+        self.pending[slot] = tokens[-1] if tokens else self.pending[slot]
+        self.kv.extend_sequence(req.request_id, count)
+        if req.is_done():
+            self._finish(slot, now)
+        return count
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.slot_req[slot]
+        req.state = RequestState.FINISHED
+        req.t_end = now
+        self.kv.free_sequence(req.request_id)
+        self.monitor.complete_request(
+            RequestRecord(
+                request_id=req.request_id,
+                t_start=req.arrival_time,
+                t_end=now,
+                prompt_len=req.prompt_len,
+                generated=len(req.output_tokens),
+                token_times=list(req.token_times),
+                worker_id=self.worker_id,
+            )
+        )
+        self.slot_req[slot] = None
+        self.histories[slot] = []
+
+    # ---------------------------------------------------------------- metrics
+    def publish_metrics(self, queue_depth: int) -> None:
+        self.monitor.update_worker(
+            self.worker_id,
+            cache_hit_rate=self.kv.hit_rate,
+            memory_utilization=self.kv.memory_utilization,
+            queue_depth=queue_depth,
+            active_load=self.load,
+            acceptance_rate=self.acceptance,
+        )
+
+
+class PipeServeEngine:
+    """Full StreamServe system on the real JAX execution path (paper Alg 1)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        n_pairs: int = 2,
+        econf: Optional[EngineConfig] = None,
+        router=None,
+        draft_cfg: Optional[ArchConfig] = None,
+        draft_params=None,
+    ):
+        self.econf = econf or EngineConfig()
+        self._now = 0.0
+        self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
+        self.scheduler = StreamScheduler(n_pairs, router or FlowGuard(), self.monitor)
+        self.pairs = [
+            StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
+            for i in range(n_pairs)
+        ]
+        self._now = 0.0
+
+    def _clock(self) -> float:
+        return self._now
+
+    # ----------------------------------------------------------------- driving
+    def submit(self, req: Request) -> int:
+        return self.scheduler.submit(req, self._now)
+
+    def fail_worker(self, worker_id: int) -> int:
+        """Simulate a node failure: drop the pair, re-route queued AND
+        in-flight work (in-flight restarts from scratch — decode state on
+        the dead pair is gone)."""
+        pair = self.pairs[worker_id]
+        pair.healthy = False
+        rerouted = self.scheduler.mark_unhealthy(worker_id, self._now)
+        for slot, req in enumerate(pair.slot_req):
+            if req is None:
+                continue
+            pair.slot_req[slot] = None
+            pair.histories[slot] = []
+            pair.kv.free_sequence(req.request_id)
+            req.output_tokens.clear()
+            req.token_times.clear()
+            req.state = RequestState.QUEUED
+            self.scheduler.submit(req, self._now)
+            rerouted += 1
+        return rerouted
+
+    def step(self) -> int:
+        """One engine tick: admit + decode on every healthy pair."""
+        self._now += 1.0  # logical time; real wall time is irrelevant on CPU
+        emitted = 0
+        for pair in self.pairs:
+            if not pair.healthy:
+                continue
+            wid = pair.worker_id
+            # stall-free admission: fill free slots from the queue
+            while pair.free_slots():
+                req = self.scheduler.next_for_prefill(wid)
+                if req is None:
+                    break
+                if not pair.admit(req, self._now):
+                    self.scheduler.prefill_queues[wid].appendleft(req)
+                    break
+            n = pair.decode_iteration(self._now)
+            emitted += n
+            self.monitor.record_tokens(wid, n, self._now)
+            pair.publish_metrics(self.scheduler.queue_depth(wid))
+        return emitted
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.scheduler.pending_total() == 0 and all(
+                not p.active_slots() for p in self.pairs if p.healthy
+            ):
+                return
+            self.step()
+        raise RuntimeError("engine did not drain within max_steps")

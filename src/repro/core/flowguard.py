@@ -1,0 +1,110 @@
+"""FlowGuard — multi-signal metric-aware routing (paper §3.3, Alg 2).
+
+Implements, verbatim from the paper:
+
+  Eq 1:  S_w = α1·C_w + α2·(1−M_w) + α3·(1−Q_w) + α4·(1−L_w)
+  Eq 2:  Overload(w) = ω_w > τ
+  Eq 3:  ω_w = M_w/100 + 2·Q_w/Q_max          (M_w here in percent, per paper)
+  Eq 4:  w* = argmin_i Q_i  when every worker is overloaded (fallback)
+
+Defaults are the paper's: α = (0.4, 0.1, 0.3, 0.2), τ = 0.85.
+
+NOTE on Eq 3: the paper divides memory *percent* by 100 (i.e. normalised
+memory in [0,1]) and weights normalised queue depth by 2; with τ = 0.85 a
+worker with an empty queue is never excluded on memory alone (max 1.0·M)…
+actually M=1.0 > 0.85 excludes; queue ≥ 42.5% of Q_max alone excludes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.metrics import STALENESS_S, WorkerMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowGuardConfig:
+    alpha_cache: float = 0.4      # α1 — cache reuse
+    alpha_memory: float = 0.1     # α2 — memory headroom
+    alpha_queue: float = 0.3      # α3 — queue headroom
+    alpha_load: float = 0.2       # α4 — load headroom
+    overload_threshold: float = 0.85  # τ
+    q_max: int = 16               # Q_max queue-depth normaliser
+    staleness_s: float = STALENESS_S
+
+    def __post_init__(self) -> None:
+        s = self.alpha_cache + self.alpha_memory + self.alpha_queue + self.alpha_load
+        if abs(s - 1.0) > 1e-6:
+            raise ValueError(f"routing weights must sum to 1 (got {s})")
+
+
+class FlowGuard:
+    """Stateless scorer + overload detector over a metrics snapshot."""
+
+    def __init__(self, config: Optional[FlowGuardConfig] = None):
+        self.config = config or FlowGuardConfig()
+
+    # ----------------------------------------------------------- Eq 1
+    def score(self, m: WorkerMetrics) -> float:
+        c = self.config
+        q_norm = min(m.queue_depth / c.q_max, 1.0)
+        return (
+            c.alpha_cache * m.cache_hit_rate
+            + c.alpha_memory * (1.0 - m.memory_utilization)
+            + c.alpha_queue * (1.0 - q_norm)
+            + c.alpha_load * (1.0 - m.active_load)
+        )
+
+    # ----------------------------------------------------------- Eq 2–3
+    def overload_score(self, m: WorkerMetrics) -> float:
+        # paper writes M_w/100 with M in percent == normalised M in [0,1]
+        return m.memory_utilization + 2.0 * min(m.queue_depth / self.config.q_max, 1.0)
+
+    def is_overloaded(self, m: WorkerMetrics) -> bool:
+        return self.overload_score(m) > self.config.overload_threshold
+
+    # ----------------------------------------------------------- Alg 2
+    def select(
+        self,
+        metrics: Dict[int, WorkerMetrics],
+        now: float,
+        healthy: Optional[Iterable[int]] = None,
+    ) -> Tuple[int, Dict[int, float]]:
+        """Pick the target stream pair.  Returns (worker_id, scores).
+
+        ``healthy`` restricts candidates (fault tolerance: dead workers are
+        excluded upstream).  Falls back to min queue depth when every
+        candidate is overloaded or stale (Eq 4).
+        """
+        candidates = list(metrics.keys() if healthy is None else healthy)
+        if not candidates:
+            raise RuntimeError("FlowGuard: no healthy workers")
+        scores: Dict[int, float] = {}
+        avail: List[int] = []
+        for i in candidates:
+            m = metrics[i]
+            if m.is_stale(now, self.config.staleness_s):
+                continue
+            if self.is_overloaded(m):
+                continue
+            scores[i] = self.score(m)
+            avail.append(i)
+        if not avail:
+            # Eq 4 fallback: least-loaded queue among healthy candidates
+            fallback = min(candidates, key=lambda i: metrics[i].queue_depth)
+            return fallback, scores
+        best = max(avail, key=lambda i: (scores[i], -i))
+        return best, scores
+
+
+class RoundRobinRouter:
+    """Ablation baseline (paper Table 8, 'w/ Round-Robin')."""
+
+    def __init__(self):
+        self._next = 0
+
+    def select(self, metrics, now, healthy=None) -> Tuple[int, Dict[int, float]]:
+        candidates = sorted(metrics.keys() if healthy is None else healthy)
+        pick = candidates[self._next % len(candidates)]
+        self._next += 1
+        return pick, {}

@@ -1,0 +1,154 @@
+"""Performance Monitor (paper §3.6) — the shared metric infrastructure that
+FlowGuard and SpecuStream both read ("joint adaptation", §1).
+
+All metrics are normalised to [0, 1] where the paper requires it (Table 2).
+Time is injected through a ``clock`` callable so the discrete-event simulator
+and the real engine drive the same code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+METRIC_INTERVAL_S = 0.5  # paper: 500 ms collection cadence
+STALENESS_S = 5 * METRIC_INTERVAL_S
+
+
+@dataclasses.dataclass
+class WorkerMetrics:
+    """Snapshot of one stream pair's runtime signals (paper Table 2)."""
+
+    worker_id: int
+    cache_hit_rate: float = 0.0       # C_w  in [0,1]
+    memory_utilization: float = 0.0   # M_w  in [0,1]
+    queue_depth: int = 0              # raw queue depth (normalised by Q_max)
+    active_load: float = 0.0          # L_w  in [0,1]
+    acceptance_rate: float = 0.0      # a_t  in [0,1]
+    recent_throughput: float = 0.0    # tokens/s
+    timestamp: float = 0.0
+
+    def is_stale(self, now: float, horizon: float = STALENESS_S) -> bool:
+        return (now - self.timestamp) > horizon
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Per-request measurements (paper Eq 17–19)."""
+
+    request_id: str
+    t_start: float
+    t_end: float = 0.0
+    prompt_len: int = 0
+    generated: int = 0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    worker_id: int = -1
+
+    @property
+    def latency(self) -> float:
+        """Eq 17: end-to-end latency."""
+        return self.t_end - self.t_start
+
+    @property
+    def tpot(self) -> float:
+        """Eq 18: mean inter-token time over generated tokens."""
+        if len(self.token_times) < 2:
+            return 0.0
+        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        return sum(gaps) / len(gaps)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (queueing + prefill + KV transfer)."""
+        if not self.token_times:
+            return self.latency
+        return self.token_times[0] - self.t_start
+
+    @property
+    def throughput(self) -> float:
+        """Eq 19: (prompt + generated) tokens / latency."""
+        lat = self.latency
+        return (self.prompt_len + self.generated) / lat if lat > 0 else 0.0
+
+
+class PerformanceMonitor:
+    """Collects worker metrics at the paper's 500 ms cadence and exposes the
+    closed-loop feedback stream consumed by FlowGuard and SpecuStream."""
+
+    def __init__(self, n_workers: int, clock: Optional[Callable[[], float]] = None):
+        self.clock = clock or time.monotonic
+        self.workers: Dict[int, WorkerMetrics] = {
+            i: WorkerMetrics(worker_id=i, timestamp=self.clock()) for i in range(n_workers)
+        }
+        self.completed: List[RequestRecord] = []
+        self._tput_window: Dict[int, Deque[Tuple[float, int]]] = {
+            i: deque() for i in range(n_workers)
+        }
+        self._last_collect = self.clock()
+
+    # ------------------------------------------------------------- updates
+    def update_worker(self, worker_id: int, **kwargs) -> None:
+        m = self.workers[worker_id]
+        for k, v in kwargs.items():
+            setattr(m, k, v)
+        m.timestamp = self.clock()
+
+    def record_tokens(self, worker_id: int, n_tokens: int, now: Optional[float] = None) -> None:
+        now = self.clock() if now is None else now
+        win = self._tput_window[worker_id]
+        win.append((now, n_tokens))
+        horizon = now - 2.0
+        while win and win[0][0] < horizon:
+            win.popleft()
+        total = sum(n for _, n in win)
+        span = max(now - win[0][0], METRIC_INTERVAL_S) if win else METRIC_INTERVAL_S
+        self.workers[worker_id].recent_throughput = total / span
+        self.workers[worker_id].timestamp = now
+
+    def complete_request(self, rec: RequestRecord) -> None:
+        self.completed.append(rec)
+
+    # ------------------------------------------------------------- queries
+    def snapshot(self) -> Dict[int, WorkerMetrics]:
+        return {i: dataclasses.replace(m) for i, m in self.workers.items()}
+
+    def due_for_collection(self, now: Optional[float] = None) -> bool:
+        now = self.clock() if now is None else now
+        if now - self._last_collect >= METRIC_INTERVAL_S:
+            self._last_collect = now
+            return True
+        return False
+
+    # ------------------------------------------------------------- summary
+    def summary(self) -> Dict[str, float]:
+        recs = self.completed
+        if not recs:
+            return {}
+        lats = sorted(r.latency for r in recs)
+        ttfts = sorted(r.ttft for r in recs)
+        tpots = [r.tpot for r in recs if r.tpot > 0]
+        tputs = [r.throughput for r in recs]
+
+        def pct(vals: List[float], p: float) -> float:
+            idx = min(int(p / 100.0 * len(vals)), len(vals) - 1)
+            return vals[idx]
+
+        t0 = min(r.t_start for r in recs)
+        t1 = max(r.t_end for r in recs)
+        total_tokens = sum(r.prompt_len + r.generated for r in recs)
+        return {
+            "n": len(recs),
+            "latency_mean": sum(lats) / len(lats),
+            "latency_p50": pct(lats, 50),
+            "latency_p90": pct(lats, 90),
+            "latency_p95": pct(lats, 95),
+            "latency_p99": pct(lats, 99),
+            "ttft_mean": sum(ttfts) / len(ttfts),
+            "ttft_p50": pct(ttfts, 50),
+            "ttft_p99": pct(ttfts, 99),
+            "tpot_mean": sum(tpots) / len(tpots) if tpots else 0.0,
+            "throughput_mean": sum(tputs) / len(tputs) if tputs else 0.0,
+            "aggregate_tput": total_tokens / max(t1 - t0, 1e-9),
+            "makespan": t1 - t0,
+        }

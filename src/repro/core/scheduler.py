@@ -1,0 +1,74 @@
+"""StreamScheduler — request orchestration (paper Alg 1).
+
+Receives requests, consults FlowGuard for placement, enqueues to the selected
+stream pair's prefill queue, and tracks lifecycle transitions.  Health
+tracking lives here too: dead/drained workers are excluded from routing and
+their queued (not-yet-prefilled) requests are re-routed — the fault-tolerance
+behaviour exercised by tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Protocol, Tuple
+
+from repro.core.flowguard import FlowGuard
+from repro.core.metrics import PerformanceMonitor
+from repro.serving.request import Request, RequestState
+
+
+class Router(Protocol):
+    def select(self, metrics, now, healthy=None) -> Tuple[int, Dict[int, float]]: ...
+
+
+class StreamScheduler:
+    def __init__(
+        self,
+        n_pairs: int,
+        router: Optional[Router] = None,
+        monitor: Optional[PerformanceMonitor] = None,
+    ):
+        self.n_pairs = n_pairs
+        self.router: Router = router or FlowGuard()
+        self.monitor = monitor or PerformanceMonitor(n_pairs)
+        self.prefill_queues: Dict[int, Deque[Request]] = {i: deque() for i in range(n_pairs)}
+        self.healthy: Dict[int, bool] = {i: True for i in range(n_pairs)}
+        self.routing_log: List[Tuple[str, int]] = []
+
+    # ---------------------------------------------------------------- routing
+    def submit(self, req: Request, now: float) -> int:
+        healthy = [i for i, ok in self.healthy.items() if ok]
+        # FlowGuard reads queue depth live (Alg 2: fresh values)
+        for i in healthy:
+            self.monitor.update_worker(i, queue_depth=len(self.prefill_queues[i]))
+        worker, _ = self.router.select(self.monitor.snapshot(), now, healthy)
+        req.worker_id = worker
+        req.state = RequestState.QUEUED
+        req.arrival_time = now if req.arrival_time == 0.0 else req.arrival_time
+        self.prefill_queues[worker].append(req)
+        self.routing_log.append((req.request_id, worker))
+        return worker
+
+    def next_for_prefill(self, worker_id: int) -> Optional[Request]:
+        q = self.prefill_queues[worker_id]
+        return q.popleft() if q else None
+
+    def queue_depth(self, worker_id: int) -> int:
+        return len(self.prefill_queues[worker_id])
+
+    # ---------------------------------------------------------- fault handling
+    def mark_unhealthy(self, worker_id: int, now: float) -> int:
+        """Worker died / is draining: exclude from routing and re-route its
+        queued requests.  Returns how many requests were re-routed."""
+        self.healthy[worker_id] = False
+        orphans = list(self.prefill_queues[worker_id])
+        self.prefill_queues[worker_id].clear()
+        for req in orphans:
+            self.submit(req, now)
+        return len(orphans)
+
+    def mark_healthy(self, worker_id: int) -> None:
+        self.healthy[worker_id] = True
+
+    def pending_total(self) -> int:
+        return sum(len(q) for q in self.prefill_queues.values())

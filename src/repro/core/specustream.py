@@ -1,0 +1,120 @@
+"""SpecuStream — runtime-adaptive speculation depth (paper §3.5, Alg 4).
+
+Implements Eq 8–16 exactly:
+
+  δ_t    = a_t − mean(f)                       (Eq 8)
+  f[idx] = δ_t ;  idx = (idx+1) mod h           (circular update)
+  M_f    = mean(|f|)                            (Eq 9)
+  φ_tput = max(1, τ_target / max(τ_recent, 1))  (Eq 10)
+  φ_load = 1 − min(l_w, 0.9)                    (Eq 11)
+  d      = d_base + (a_t · M_f · γ) · φ_load · φ_tput   (Eq 12)
+  d*     = clip(d, d_min, d_max)                (Eq 13)
+  b_micro = max(1, ⌊16·5 / d*⌋)                 (Eq 14)
+  τ_proj = τ_recent · (1 + a_t · 0.5)           (Eq 15)
+  τ_recent ← 0.9·τ_recent + 0.1·τ_proj          (Eq 16)
+
+XLA requires static shapes, so the continuous d* is snapped to a bucket from
+``DEPTH_BUCKETS`` (the largest bucket ≤ d*); each bucket has its own compiled
+verify step.  This is the TPU adaptation recorded in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+DEPTH_BUCKETS: Tuple[int, ...] = (2, 3, 4, 5, 6, 8, 10, 12, 16, 20)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecuStreamConfig:
+    d_base: float = 5.0          # baseline depth
+    gamma: float = 5.0           # amplification factor γ
+    d_min: int = 2
+    d_max: int = 20
+    history: int = 10            # flow vector length h
+    target_throughput: float = 400.0  # τ_target tokens/s (paper example)
+    ema_old: float = 0.9
+    ema_new: float = 0.1
+
+
+@dataclasses.dataclass
+class SpecDecision:
+    depth: float                 # raw d* (Eq 13)
+    bucket_depth: int            # snapped to DEPTH_BUCKETS
+    micro_batch: int             # Eq 14
+    projected_throughput: float  # Eq 15
+    flow_magnitude: float        # M_f
+    gradient: float              # δ_t
+
+
+def snap_to_bucket(d: float, buckets: Tuple[int, ...] = DEPTH_BUCKETS) -> int:
+    """Largest bucket <= d (at least the smallest bucket)."""
+    best = buckets[0]
+    for b in buckets:
+        if b <= d:
+            best = b
+    return best
+
+
+class SpecuStream:
+    """Per-worker adaptive speculation controller (one instance per decode
+    lane; state = the flow vector + τ_recent)."""
+
+    def __init__(self, config: Optional[SpecuStreamConfig] = None):
+        self.config = config or SpecuStreamConfig()
+        self.flow: List[float] = [0.0] * self.config.history
+        self.idx = 0
+        self.tau_recent = self.config.target_throughput  # optimistic start
+        self.last_decision: Optional[SpecDecision] = None
+
+    # ------------------------------------------------------------- Alg 4
+    def adapt(self, acceptance_rate: float, load: float, throughput: float) -> SpecDecision:
+        c = self.config
+        a_t = min(max(acceptance_rate, 0.0), 1.0)
+        # Eq 8 — gradient vs. recent history
+        delta = a_t - sum(self.flow) / len(self.flow)
+        self.flow[self.idx] = delta
+        self.idx = (self.idx + 1) % c.history
+        # Eq 9 — flow magnitude (volatility)
+        mag = sum(abs(x) for x in self.flow) / len(self.flow)
+        # Eq 10 — throughput scaling
+        scale = max(1.0, c.target_throughput / max(throughput, 1.0))
+        # Eq 11 — load adaptation
+        adj = 1.0 - min(max(load, 0.0), 0.9)
+        # Eq 12–13 — depth
+        d = c.d_base + (a_t * mag * c.gamma) * adj * scale
+        d_star = min(max(d, float(c.d_min)), float(c.d_max))
+        # Eq 14 — inverse micro-batch coupling
+        b_micro = max(1, int(16 * 5 / d_star))
+        # Eq 15–16 — throughput projection
+        t_proj = throughput * (1.0 + a_t * 0.5)
+        self.tau_recent = c.ema_old * self.tau_recent + c.ema_new * t_proj
+        decision = SpecDecision(
+            depth=d_star,
+            bucket_depth=snap_to_bucket(d_star),
+            micro_batch=b_micro,
+            projected_throughput=t_proj,
+            flow_magnitude=mag,
+            gradient=delta,
+        )
+        self.last_decision = decision
+        return decision
+
+
+class FixedSpeculation:
+    """Ablation baseline: fixed depth d (paper Table 9) or d=0 (no spec,
+    'w/o SpecuStream' in Table 8)."""
+
+    def __init__(self, depth: int):
+        self.depth = depth
+
+    def adapt(self, acceptance_rate: float, load: float, throughput: float) -> SpecDecision:
+        d = max(self.depth, 0)
+        return SpecDecision(
+            depth=float(d),
+            bucket_depth=snap_to_bucket(d) if d >= DEPTH_BUCKETS[0] else 0,
+            micro_batch=max(1, int(16 * 5 / d)) if d > 0 else 16,
+            projected_throughput=throughput,
+            flow_magnitude=0.0,
+            gradient=0.0,
+        )

@@ -1,0 +1,7 @@
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401
+from repro.data.workloads import (  # noqa: F401
+    WORKLOADS,
+    WorkloadProfile,
+    make_workload,
+    sample_requests,
+)

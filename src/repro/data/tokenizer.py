@@ -1,0 +1,29 @@
+"""Byte-level tokenizer (no external vocab files in this environment).
+
+256 byte tokens + special tokens.  Deterministic, reversible, and adequate
+for the end-to-end examples and the training data pipeline: the system's
+mechanisms (routing, speculation, batching) are token-content-agnostic.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class ByteTokenizer:
+    PAD = 256
+    BOS = 257
+    EOS = 258
+
+    vocab_size = 259
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        data = bytes(i for i in ids if i < 256)
+        return data.decode("utf-8", errors="replace")

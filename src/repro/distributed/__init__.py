@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    P,
+    logical_to_spec,
+    named_sharding,
+    shard_params,
+    unzip_params,
+)

@@ -1,0 +1,137 @@
+"""Fault tolerance & straggler mitigation for the serving/training control
+plane.
+
+Serving-side (used by PipeServeEngine and the simulator):
+
+* :class:`HealthTracker` — heartbeat bookkeeping per worker; a worker that
+  misses ``dead_after`` seconds of heartbeats is declared dead and its
+  queued work re-routed through the StreamScheduler (already implemented
+  there); a recovered worker rejoins the routing pool.
+* :class:`StragglerDetector` — per-worker iteration-time EWMA vs. the
+  fleet median; a worker slower than ``threshold`` × median is flagged so
+  FlowGuard can exclude it (slow ICI links / thermal throttling at pod
+  scale look exactly like this).
+
+Training-side:
+
+* :class:`TrainSupervisor` — wraps the checkpoint manager into a
+  crash-restart loop: on failure, restore the latest checkpoint (possibly
+  onto a SMALLER device pool — elastic restart, since checkpoints are
+  topology-independent full arrays) and continue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatState:
+    last_seen: float = 0.0
+    alive: bool = True
+    incarnation: int = 0   # bumps on every recovery (fences stale writes)
+
+
+class HealthTracker:
+    def __init__(self, n_workers: int, dead_after: float = 2.0):
+        self.dead_after = dead_after
+        self.state: Dict[int, HeartbeatState] = {
+            i: HeartbeatState() for i in range(n_workers)
+        }
+
+    def heartbeat(self, wid: int, now: float) -> None:
+        st = self.state[wid]
+        if not st.alive:
+            st.alive = True
+            st.incarnation += 1
+        st.last_seen = now
+
+    def sweep(self, now: float) -> List[int]:
+        """Returns workers newly declared dead."""
+        died = []
+        for wid, st in self.state.items():
+            if st.alive and (now - st.last_seen) > self.dead_after:
+                st.alive = False
+                died.append(wid)
+        return died
+
+    def alive(self) -> List[int]:
+        return [w for w, st in self.state.items() if st.alive]
+
+
+class StragglerDetector:
+    """Flags workers whose step time drifts above threshold x fleet median."""
+
+    def __init__(self, n_workers: int, threshold: float = 1.5, ema: float = 0.8):
+        self.threshold = threshold
+        self.ema = ema
+        self.step_time: Dict[int, float] = {i: 0.0 for i in range(n_workers)}
+
+    def observe(self, wid: int, step_s: float) -> None:
+        prev = self.step_time.get(wid, 0.0)
+        self.step_time[wid] = (
+            step_s if prev == 0.0 else self.ema * prev + (1 - self.ema) * step_s
+        )
+
+    def stragglers(self) -> List[int]:
+        vals = [v for v in self.step_time.values() if v > 0]
+        if len(vals) < 2:
+            return []
+        med = statistics.median(vals)
+        return [
+            w for w, v in self.step_time.items()
+            if v > 0 and v > self.threshold * med
+        ]
+
+
+@dataclasses.dataclass
+class TrainSupervisorReport:
+    steps_run: int
+    restarts: int
+    restore_steps: List[int]
+
+
+class TrainSupervisor:
+    """Crash-restart training driver.
+
+    ``run_step(step) -> state`` executes one training step and may raise;
+    ``save(step)`` / ``restore() -> step`` talk to the checkpoint manager.
+    Failures roll back to the latest checkpoint and replay — the data
+    pipeline is seeded per step, so replays are bit-deterministic.
+    """
+
+    def __init__(
+        self,
+        run_step: Callable[[int], None],
+        save: Callable[[int], None],
+        restore: Callable[[], int],
+        checkpoint_every: int = 50,
+        max_restarts: int = 10,
+    ):
+        self.run_step = run_step
+        self.save = save
+        self.restore = restore
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+
+    def run(self, total_steps: int) -> TrainSupervisorReport:
+        restarts = 0
+        restore_steps: List[int] = []
+        step = self.restore()
+        steps_run = 0
+        while step < total_steps:
+            try:
+                self.run_step(step)
+                steps_run += 1
+                step += 1
+                if step % self.checkpoint_every == 0:
+                    self.save(step)
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                step = self.restore()
+                restore_steps.append(step)
+        self.save(step)
+        return TrainSupervisorReport(steps_run, restarts, restore_steps)

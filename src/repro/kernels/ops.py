@@ -1,0 +1,100 @@
+"""Public kernel API with backend dispatch.
+
+On TPU the Pallas kernels are used; everywhere else (this CPU container, any
+GPU fallback) the chunked pure-jnp references run.  ``force_ref=True`` (or the
+``REPRO_FORCE_REF_KERNELS`` env var) pins the reference path — the dry-run
+uses it so lowering succeeds on the CPU host platform.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_REF_KERNELS"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    force_ref: bool = False,
+    interpret: bool = False,
+):
+    """Prefill / training attention.  See ref.flash_attention for shapes."""
+    if not force_ref and (interpret or _use_pallas()):
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale,
+            interpret=interpret,
+        )
+    return ref.flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale)
+
+
+def decode_attention(
+    q,
+    k_cache,
+    v_cache,
+    cache_len,
+    *,
+    kv_positions=None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    causal: bool = True,
+    force_ref: bool = False,
+    interpret: bool = False,
+):
+    """Decode-step attention of T new tokens against a KV cache."""
+    if causal and not force_ref and (interpret or _use_pallas()):
+        from repro.kernels import decode_attention as da
+
+        return da.decode_attention_pallas(
+            q, k_cache, v_cache, cache_len, kv_positions=kv_positions,
+            window=window, scale=scale, interpret=interpret,
+        )
+    return ref.decode_attention(
+        q, k_cache, v_cache, cache_len, kv_positions=kv_positions, window=window,
+        scale=scale, causal=causal,
+    )
+
+
+def ssd_scan(
+    x,
+    dt,
+    A,
+    Bm,
+    C,
+    *,
+    chunk: int = 256,
+    initial_state=None,
+    return_state: bool = False,
+    force_ref: bool = False,
+    interpret: bool = False,
+):
+    """Chunked Mamba2 SSD scan."""
+    if not force_ref and (interpret or _use_pallas()):
+        from repro.kernels import ssd_scan as sk
+
+        return sk.ssd_scan_pallas(
+            x, dt, A, Bm, C, chunk=chunk, initial_state=initial_state,
+            return_state=return_state, interpret=interpret,
+        )
+    return ref.ssd_scan(
+        x, dt, A, Bm, C, chunk=chunk, initial_state=initial_state, return_state=return_state
+    )
+
+
+ssd_decode_step = ref.ssd_decode_step  # single-token recurrence is trivially small

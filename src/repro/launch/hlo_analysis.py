@@ -1,0 +1,295 @@
+"""HLO cost analysis with while-loop trip-count multiplication.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+useless for scan-over-layers models (a 64-layer scanned stack reports ~1
+layer of FLOPs).  This analyzer parses the post-SPMD HLO text, walks the call
+graph (while / call / fusion / conditional), multiplies loop bodies by
+``backend_config={"known_trip_count":{"n":...}}`` (falling back to the
+condition's compare constant), and accumulates:
+
+* ``flops``        — 2·|out|·K for dots (K from contracting dims), |out| for
+                     elementwise arithmetic/transcendental ops
+* ``bytes``        — operands + outputs of every top-level op per computation
+                     (fusions count their boundary traffic only, matching
+                     post-fusion HBM behaviour)
+* ``collective_bytes`` — per collective kind, trip-multiplied
+
+Shapes in the SPMD module are per-device shards, so every number reported
+here is PER DEVICE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "pred": 1, "s8": 1, "u8": 1, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "negate", "abs", "floor", "ceil", "round",
+    "rsqrt", "sqrt", "tanh", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "power", "logistic", "sign", "cosine", "sine", "atan2",
+    "remainder", "clamp", "convert", "is-finite", "not",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call", "rng-bit-generator",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    lhs: str          # result type text
+    operands_text: str
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and not s.startswith("HloModule"):
+                cur = Computation(m.group(1), [])
+                if s.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            cur.instrs.append(
+                Instr(m.group(1), m.group(3), m.group(2), m.group(4), m.group(5), s)
+            )
+    return comps, entry
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _dot_flops(ins: Instr, types: Dict[str, str]) -> int:
+    """2 * |out| * K.  Post-opt HLO prints operands as bare names, so the lhs
+    operand's shape comes from the module-wide name -> type symbol table."""
+    out = _shape_elems(ins.lhs)
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs + ins.line)
+    names = _OPERAND_NAME_RE.findall(ins.operands_text)
+    shapes = _SHAPE_RE.findall(types.get(names[0], "")) if names else []
+    if not mdims or not shapes:
+        return 2 * out
+    dt, dims_text = shapes[0]
+    dims = [int(d) for d in dims_text.split(",") if d]
+    k = 1
+    for idx in (int(i) for i in mdims.group(1).split(",") if i):
+        if idx < len(dims):
+            k *= dims[idx]
+    return 2 * out * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transcendentals: float = 0.0
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add_bytes(self, op: str, nbytes: float) -> None:
+        self.bytes += nbytes
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + nbytes
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + mult * v
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + mult * v
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        # module-wide name -> result-type text (operands print as bare names)
+        self.types: Dict[str, str] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                self.types[ins.name] = ins.lhs
+
+    def _operand_bytes(self, ins: Instr, cap: Optional[int] = None) -> int:
+        """Sum of operand sizes.  ``cap`` bounds any single operand (used for
+        fusions: an operand vastly larger than the fusion output is being
+        dynamic-sliced/gathered inside the fusion — e.g. one layer's slice of
+        a scan-stacked weight array — and only the touched region hits HBM)."""
+        total = 0
+        for n in _OPERAND_NAME_RE.findall(ins.operands_text):
+            b = _shape_bytes(self.types.get(n, ""))
+            if cap is not None:
+                b = min(b, cap)
+            total += b
+        return total
+
+    def _trip_count(self, ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.attrs) or _TRIP_RE.search(ins.line)
+        if m:
+            return int(m.group(1))
+        # fallback: max s32 constant in the condition computation
+        called = _CALLED_RE.findall(ins.line)
+        for name in called:
+            comp = self.comps.get(name)
+            if comp and "condition" in ins.line:
+                consts = [int(c) for i in comp.instrs for c in _CONST_RE.findall(i.line)]
+                if consts:
+                    return max(consts)
+        return 1
+
+    def _called(self, ins: Instr) -> List[str]:
+        return [n for n in _CALLED_RE.findall(ins.line) if n in self.comps]
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        comp = self.comps[name]
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                trips = self._trip_count(ins)
+                for sub in self._called(ins):
+                    total.add(self.comp_cost(sub), trips)
+                continue
+            if op in ("call", "conditional", "sort", "map", "reduce", "reduce-window", "scatter", "select-and-scatter"):
+                for sub in self._called(ins):
+                    total.add(self.comp_cost(sub))
+                if op not in ("call", "conditional"):
+                    total.add_bytes(op, _shape_bytes(ins.lhs) + self._operand_bytes(ins))
+                continue
+            if op == "fusion":
+                # flops: descend; bytes: boundary traffic only
+                for sub in self._called(ins):
+                    sub_cost = self.comp_cost(sub)
+                    total.flops += sub_cost.flops
+                    total.transcendentals += sub_cost.transcendentals
+                    for k, v in sub_cost.collectives.items():
+                        total.collectives[k] = total.collectives.get(k, 0.0) + v
+                out_b = _shape_bytes(ins.lhs)
+                total.add_bytes("fusion", out_b + self._operand_bytes(ins, cap=max(32 * out_b, 1 << 20)))
+                continue
+            if op.startswith(_COLLECTIVES) or any(op == c or op == c + "-start" for c in _COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if op.startswith(c))
+                nb = _shape_bytes(ins.lhs)
+                if op.endswith("-start"):
+                    nb //= 2
+                total.collectives[base] = total.collectives.get(base, 0.0) + nb
+                total.add_bytes(base, nb)
+                continue
+            if op.endswith("-done"):
+                continue
+            if op in ("dot", "dot-general"):
+                total.flops += _dot_flops(ins, self.types)
+                total.add_bytes("dot", _shape_bytes(ins.lhs) + self._operand_bytes(ins))
+                continue
+            if op == "convolution":
+                total.flops += 2 * _shape_elems(ins.lhs) * 64  # coarse; convs unused here
+                total.add_bytes("convolution", _shape_bytes(ins.lhs) + self._operand_bytes(ins))
+                continue
+            if op in _ELEMENTWISE:
+                n = _shape_elems(ins.lhs)
+                total.flops += n
+                if op in ("tanh", "exponential", "log", "logistic", "power", "rsqrt", "sqrt"):
+                    total.transcendentals += n
+                total.add_bytes("elementwise", _shape_bytes(ins.lhs) + self._operand_bytes(ins))
+                continue
+            if op in _SKIP_BYTES:
+                continue
+            # data-movement ops: slices/gathers/scatters touch only the
+            # addressed region and updates are in-place, so the traffic is
+            # output-driven (2x = read + write), NOT full-operand.
+            if op in ("dynamic-slice", "slice", "gather", "broadcast", "reshape",
+                      "transpose", "pad", "reverse", "copy"):
+                total.add_bytes(op, 2 * _shape_bytes(ins.lhs))
+            elif op in ("dynamic-update-slice", "scatter", "select-and-scatter"):
+                # read+write of the update region; names can't size the update
+                # operand reliably here, so bound by output (region <= output)
+                upd = self._operand_bytes(ins, cap=_shape_bytes(ins.lhs)) // 2
+                total.add_bytes(op, min(2 * upd, 2 * _shape_bytes(ins.lhs)))
+            else:
+                total.add_bytes(op, _shape_bytes(ins.lhs) + self._operand_bytes(ins))
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        cost = self.comp_cost(self.entry)
+        cost.collectives["total"] = sum(
+            v for k, v in cost.collectives.items() if k in _COLLECTIVES
+        )
+        return cost
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloAnalyzer(hlo_text).entry_cost()

@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    Model,
+    build_model,
+)

@@ -1,0 +1,326 @@
+"""GQA attention with RoPE, qk-norm, QKV bias, sliding windows and KV caches.
+
+Cache layout (per attention layer)
+----------------------------------
+``k``/``v`` : (B, cap, K, D) — ``cap`` is ``min(max_len, window + SPEC_MARGIN)``
+for SWA archs (ring buffer) else ``max_len``.
+``kv_pos``  : (B, cap) int32 — absolute position written into each slot, -1 if
+empty.  Ring-buffer slots are addressed ``pos % cap``; the margin keeps
+speculative (uncommitted) writes from clobbering live window entries before a
+rollback.
+
+Speculative rollback: rejected tokens simply leave stale slots behind; masking
+is positional (slot position <= query position), so a rewound ``cache_len``
+makes stale slots unreachable and they are overwritten on the next write.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import P, constraint
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_norm, rope
+
+SPEC_MARGIN = 32  # ring-buffer slack for uncommitted speculative tokens
+
+
+def cache_capacity(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window + SPEC_MARGIN)
+    return max_len
+
+
+def head_mask(cfg: ArchConfig, dtype) -> Optional[jax.Array]:
+    """(H_pad,) 1.0 for real heads, 0.0 for TP-padding heads (or None)."""
+    Hp, H, K = cfg.padded_heads, cfg.n_heads, cfg.n_kv_heads
+    if Hp == H:
+        return None
+    G = H // K
+    r = jnp.arange(Hp) % cfg.padded_group
+    return (r < G).astype(dtype)
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    d, H, K, D = cfg.d_model, cfg.padded_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (H, D), ("embed", "heads", None), dtype),
+        "wk": dense_init(ks[1], d, (K, D), ("embed", "kv", None), dtype),
+        "wv": dense_init(ks[2], d, (K, D), ("embed", "kv", None), dtype),
+        "wo": P(
+            dense_init(ks[3], H * D, d, (None,), dtype).value.reshape(H, D, d),
+            ("heads", None, "embed"),
+        ),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = P(jnp.zeros((H, D), dtype), ("heads", None))
+        p["bk"] = P(jnp.zeros((K, D), dtype), ("kv", None))
+        p["bv"] = P(jnp.zeros((K, D), dtype), ("kv", None))
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = P(jnp.ones((D,), dtype), (None,))
+        p["k_norm"] = P(jnp.ones((D,), dtype), (None,))
+    return p
+
+
+def _project_q(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_out(p: dict, cfg: ArchConfig, out: jax.Array, eq: str) -> jax.Array:
+    """Output projection, masking TP-padding heads first so padded heads
+    contribute nothing in forward or backward (their wq/wo grads are zero)."""
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return jnp.einsum(eq, out, p["wo"])
+
+
+def _project_kv(p: dict, cfg: ArchConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def attention_full(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Training / encoder forward over a full sequence."""
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constraint(q, ("batch", None, "heads", None))
+    k = constraint(k, ("batch", None, "kv", None))
+    out = ops.flash_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window if causal else None
+    )
+    return _project_out(p, cfg, out, "bshe,hed->bsd")
+
+
+def attention_prefill(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Prefill: causal attention returning (output, (k, v)) for cache seeding."""
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constraint(q, ("batch", None, "heads", None))
+    out = ops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    return _project_out(p, cfg, out, "bshe,hed->bsd"), (k, v)
+
+
+def write_cache(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    kv_pos: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    start_pos: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Write T new KV entries at absolute positions start_pos + [0, T).
+
+    cache_k/v: (B, cap, K, D); kv_pos: (B, cap); k/v_new: (B, T, K, D);
+    start_pos: (B,).  Slots are ``position % cap`` (ring buffer).
+    """
+    cap = cache_k.shape[1]
+    T = k_new.shape[1]
+    pos = start_pos[:, None] + jnp.arange(T)[None, :]  # (B, T)
+    slots = (pos % cap).astype(jnp.int32)
+
+    def upd(ck, cv, cp, kn, vn, sl, ps):
+        ck = ck.at[sl].set(kn)
+        cv = cv.at[sl].set(vn)
+        cp = cp.at[sl].set(ps)
+        return ck, cv, cp
+
+    return jax.vmap(upd)(cache_k, cache_v, kv_pos, k_new, v_new, slots, pos)
+
+
+def _cp_mesh():
+    """Mesh for context-parallel decode, if one is active with a model axis."""
+    from repro.distributed.sharding import _current_mesh
+
+    mesh = _current_mesh()
+    if mesh is not None and "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        return mesh
+    return None
+
+
+def _decode_attention_cp(
+    mesh, cfg: ArchConfig, q, k_new, v_new, cache, cache_len,
+) -> Tuple[jax.Array, dict]:
+    """Context-parallel decode attention (shard_map; beyond-paper perf path).
+
+    The KV cache is sequence-sharded over the model axis; GSPMD's default
+    lowering of softmax-over-sharded-S ALL-GATHERS the cache every step
+    (3.6 GB/step/device at qwen2.5-14b decode_32k — dry-run measured).
+    Here every shard instead (1) writes the new KV tokens locally iff the
+    ring slot falls in its range, (2) computes flash-decode partial stats
+    over its LOCAL slice, (3) merges with one psum of the (B,H,T,D)-sized
+    numerator + (B,H,T) stats — ~0.4 MB vs 3.6 GB of collective traffic.
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    B, T, H, D = q.shape
+    K = cfg.n_kv_heads
+    batch_axes = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    n_model = mesh.shape["model"]
+    n_batch = 1
+    for ax in batch_axes:
+        n_batch *= mesh.shape[ax]
+    cap = cache["k"].shape[1]
+    if cap % n_model or B % n_batch:
+        # indivisible capacity or batch (e.g. long_500k batch=1): fall back
+        # to the GSPMD path, which replicates the batch dim instead
+        return None
+    S_loc = cap // n_model
+    scale = D ** -0.5
+
+    def body(q_l, kn, vn, ck, cv, cp, clen):
+        j = jax.lax.axis_index("model")
+        lo = j * S_loc
+        Bl = q_l.shape[0]
+        # ---- local ring-buffer write ------------------------------------
+        pos = clen[:, None] + jnp.arange(T)[None, :]            # (Bl, T)
+        slot = (pos % cap).astype(jnp.int32)
+        local = (slot >= lo) & (slot < lo + S_loc)
+        ls = jnp.clip(slot - lo, 0, S_loc - 1)
+
+        def wr(ck1, cv1, cp1, kn1, vn1, ls1, loc1, pos1):
+            old_k = ck1[ls1]
+            old_v = cv1[ls1]
+            old_p = cp1[ls1]
+            m = loc1[:, None, None]
+            ck1 = ck1.at[ls1].set(jnp.where(m, kn1, old_k))
+            cv1 = cv1.at[ls1].set(jnp.where(m, vn1, old_v))
+            cp1 = cp1.at[ls1].set(jnp.where(loc1, pos1, old_p))
+            return ck1, cv1, cp1
+
+        ck, cv, cp = jax.vmap(wr)(ck, cv, cp, kn, vn, ls, local, pos)
+        # ---- local partial flash-decode ----------------------------------
+        G = H // K
+        qf = q_l.reshape(Bl, T, K, G, D).astype(jnp.float32) * scale
+        s = jnp.einsum("btkgd,bskd->bkgts", qf, ck.astype(jnp.float32))
+        q_pos = clen[:, None] + jnp.arange(T)[None, :]          # (Bl, T)
+        mask = (cp[:, None, :] >= 0) & (cp[:, None, :] <= q_pos[:, :, None])
+        if cfg.sliding_window is not None:
+            mask &= cp[:, None, :] > q_pos[:, :, None] - cfg.sliding_window
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m = s.max(axis=-1)
+        p_ = jnp.exp(s - m[..., None])
+        l = p_.sum(axis=-1)
+        num = jnp.einsum("bkgts,bskd->bkgtd", p_, cv.astype(jnp.float32))
+        # ---- LSE merge across sequence shards ----------------------------
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        num_g = jax.lax.psum(num * corr[..., None], "model")
+        l_g = jax.lax.psum(l * corr, "model")
+        out = num_g / jnp.maximum(l_g, 1e-30)[..., None]        # (Bl,K,G,T,D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(Bl, T, H, D)
+        return out.astype(q_l.dtype), ck, cv, cp
+
+    qspec = PS(bspec, None, None, None)
+    kvspec = PS(bspec, "model", None, None)
+    out, ck, cv, cp = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(qspec, qspec, qspec, kvspec, kvspec, PS(bspec, "model"), PS(bspec)),
+        out_specs=(qspec, kvspec, kvspec, PS(bspec, "model")),
+        check_vma=False,
+    )(q, k_new, v_new, cache["k"], cache["v"], cache["kv_pos"], cache_len)
+    return out, {"k": ck, "v": cv, "kv_pos": cp}
+
+
+def attention_decode(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache: dict,
+    cache_len: jax.Array,
+) -> Tuple[jax.Array, dict]:
+    """Decode T new tokens (T >= 1 for speculative verification).
+
+    ``cache`` = {"k", "v", "kv_pos"}; ``cache_len`` (B,) is the committed
+    length BEFORE these tokens.  Query i sits at absolute position
+    cache_len + i.
+    """
+    B, T, _ = x.shape
+    q = _project_q(p, cfg, x)
+    k, v = _project_kv(p, cfg, x)
+    pos = cache_len[:, None] + jnp.arange(T)[None, :]
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    # context-parallel path: sequence-sharded KV, LSE-merged (see
+    # _decode_attention_cp); ring-buffer (SWA) caches shard the same way,
+    # with the window folded into the position mask.
+    mesh = _cp_mesh()
+    if mesh is not None:
+        res = _decode_attention_cp(mesh, cfg, q, k, v, cache, cache_len)
+        if res is not None:
+            out, new_cache = res
+            out = _project_out(p, cfg, out, "bthe,hed->btd")
+            return out, new_cache
+
+    ck, cv, cp = write_cache(cache["k"], cache["v"], cache["kv_pos"], k, v, cache_len)
+    ck = constraint(ck, ("batch", "kv_seq", "kv", None))
+    cv = constraint(cv, ("batch", "kv_seq", "kv", None))
+    out = ops.decode_attention(
+        q, ck, cv, cache_len + T, kv_positions=cp, window=cfg.sliding_window
+    )
+    out = _project_out(p, cfg, out, "bthe,hed->btd")
+    return out, {"k": ck, "v": cv, "kv_pos": cp}
+
+
+def attention_cross(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    mem_k: jax.Array,
+    mem_v: jax.Array,
+    mem_len: jax.Array,
+) -> jax.Array:
+    """Cross attention against precomputed encoder memory (no RoPE, no mask
+    beyond source-length validity)."""
+    q = _project_q(p, cfg, x)
+    out = ops.decode_attention(q, mem_k, mem_v, mem_len, window=None, causal=False)
+    return _project_out(p, cfg, out, "bthe,hed->btd")
+
+
+def cross_memory(p: dict, cfg: ArchConfig, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output (prefill-time)."""
+    return _project_kv(p, cfg, enc_out)
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    cap = cache_capacity(cfg, max_len)
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cap, K, D), dtype),
+        "v": jnp.zeros((batch, cap, K, D), dtype),
+        "kv_pos": jnp.full((batch, cap), -1, jnp.int32),
+    }

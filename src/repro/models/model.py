@@ -1,0 +1,222 @@
+"""Public model API: ``build_model(cfg)`` -> :class:`Model`.
+
+A :class:`Model` bundles pure functions:
+
+``init(key)``                                -> P-leaf param tree
+``loss_fn(params, batch)``                   -> (loss, metrics)      [train]
+``prefill(params, batch, max_len)``          -> (last_logits, cache)
+``decode_step(params, cache, tokens)``       -> (logits, cache')     [T >= 1]
+``commit_cache(cache', accept_idx)``         -> canonical cache      [rollback]
+``init_cache(batch, max_len)``               -> canonical cache shapes
+
+Batches
+-------
+LM      : {"tokens": (B, S) int32}
+VLM     : + {"patches": (B, n_patches, d_model)}       (stub frontend)
+enc-dec : {"frames": (B, S_src, d_model), "tokens": (B, S_tgt)}
+Training loss is next-token CE over text tokens (enc-dec: over the target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import P, constraint
+from repro.models import transformer as tfm
+from repro.models.layers import embed_tokens, init_embedding, init_rms_norm, rms_norm, unembed
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Tuple[jax.Array, Dict]]
+    forward: Callable[..., jax.Array]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    commit_cache: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.cfg.n_layers // self.cfg.scan_block
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    n_blocks = cfg.n_layers // cfg.scan_block
+    dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def init(key) -> Dict[str, Any]:
+        k_emb, k_stack, k_enc = jax.random.split(key, 3)
+        params: Dict[str, Any] = {
+            "embedding": init_embedding(k_emb, cfg),
+            "blocks": tfm.init_stack(k_stack, cfg, n_blocks, cross=cfg.is_encdec),
+            "final_norm": init_rms_norm(cfg.d_model, dtype),
+        }
+        if cfg.is_encdec:
+            assert cfg.n_encoder_layers % cfg.scan_block == 0
+            params["encoder"] = tfm.init_stack(
+                k_enc, cfg, cfg.n_encoder_layers // cfg.scan_block, cross=False
+            )
+            params["enc_norm"] = init_rms_norm(cfg.d_model, dtype)
+        return params
+
+    # -------------------------------------------------------------- embedding
+    def _embed_inputs(params, batch) -> Tuple[jax.Array, int]:
+        """Returns (x, n_prefix) where n_prefix = frontend tokens prepended."""
+        x = embed_tokens(params["embedding"], batch["tokens"])
+        n_prefix = 0
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        return constraint(x, ("batch", None, "embed")), n_prefix
+
+    def _encode(params, frames) -> jax.Array:
+        x = constraint(frames.astype(dtype), ("batch", None, "embed"))
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (x.shape[0], S))
+        x, _ = tfm.scan_full(
+            params["encoder"], cfg, x, positions, causal=False, remat=cfg.remat_policy
+        )
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- forward
+    def forward(params, batch) -> jax.Array:
+        """Full-sequence logits (training). (B, S_text, vocab)."""
+        cross_mem = None
+        if cfg.is_encdec:
+            enc_out = _encode(params, batch["frames"])
+            mem_len = jnp.full((enc_out.shape[0],), enc_out.shape[1], jnp.int32)
+            cross_mem = (enc_out, mem_len)
+        x, n_prefix = _embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, aux = tfm.scan_full(
+            params["blocks"], cfg, x, positions, causal=True,
+            cross_mem=cross_mem, remat=cfg.remat_policy,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        logits = unembed(params["embedding"], x, cfg.tie_embeddings, cfg.vocab_size)
+        return constraint(logits, ("batch", None, "vocab"))
+
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict]:
+        cross_mem = None
+        if cfg.is_encdec:
+            enc_out = _encode(params, batch["frames"])
+            mem_len = jnp.full((enc_out.shape[0],), enc_out.shape[1], jnp.int32)
+            cross_mem = (enc_out, mem_len)
+        x, n_prefix = _embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, aux = tfm.scan_full(
+            params["blocks"], cfg, x, positions, causal=True,
+            cross_mem=cross_mem, remat=cfg.remat_policy,
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if n_prefix:
+            x = x[:, n_prefix:]
+        logits = unembed(params["embedding"], x, cfg.tie_embeddings, cfg.vocab_size)
+        logits = constraint(logits, ("batch", None, "vocab")).astype(jnp.float32)
+        targets = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        token_loss = logz - tgt_logit
+        ce = token_loss.mean()
+        loss = ce
+        metrics = {"ce": ce, "ppl_log": ce}
+        if cfg.moe is not None:
+            loss = (
+                loss
+                + cfg.moe.load_balance_loss * aux["load_balance"]
+                + cfg.moe.router_z_loss * aux["router_z"]
+            )
+            metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(batch: int, max_len: int, cross_len: Optional[int] = None):
+        one = tfm.init_block_cache(cfg, batch, max_len, dtype)
+        blocks = jax.tree.map(
+            lambda x: jnp.tile(x[None], (n_blocks,) + (1,) * x.ndim), one
+        )
+        cache: Dict[str, Any] = {"blocks": blocks, "len": jnp.zeros((batch,), jnp.int32)}
+        if cfg.is_encdec:
+            cl = cross_len or 1
+            K, D = cfg.n_kv_heads, cfg.head_dim
+            for i in range(cfg.scan_block):
+                blocks[str(i)]["cross_k"] = jnp.zeros((n_blocks, batch, cl, K, D), dtype)
+                blocks[str(i)]["cross_v"] = jnp.zeros((n_blocks, batch, cl, K, D), dtype)
+            cache["mem_len"] = jnp.zeros((batch,), jnp.int32)
+        return cache
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(params, batch, max_len: int):
+        """Run the prompt; returns (last-token logits (B, V), cache)."""
+        cross_mem = None
+        mem_len = None
+        if cfg.is_encdec:
+            enc_out = _encode(params, batch["frames"])
+            mem_len = jnp.full((enc_out.shape[0],), enc_out.shape[1], jnp.int32)
+            cross_mem = (enc_out, mem_len)
+        x, n_prefix = _embed_inputs(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        cache0 = init_cache(B, max_len)
+        x, aux, new_blocks = tfm.scan_prefill(
+            params["blocks"], cfg, x, positions, cache0["blocks"], cross_mem=cross_mem
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embedding"], x[:, -1:], cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+        cache = {"blocks": new_blocks, "len": jnp.full((B,), S, jnp.int32)}
+        if cfg.is_encdec:
+            cache["mem_len"] = mem_len
+        return logits.astype(jnp.float32), cache
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(params, cache, tokens: jax.Array):
+        """tokens: (B, T) — T = 1 (plain) or draft_depth+1 (spec verify)."""
+        x = embed_tokens(params["embedding"], tokens)
+        x = constraint(x, ("batch", None, "embed"))
+        x, new_blocks = tfm.scan_decode(
+            params["blocks"], cfg, x, cache["blocks"], cache["len"],
+            mem_len=cache.get("mem_len"),
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embedding"], x, cfg.tie_embeddings, cfg.vocab_size)
+        new_cache = dict(cache, blocks=new_blocks)
+        new_cache["len"] = cache["len"] + tokens.shape[1]
+        return logits.astype(jnp.float32), new_cache
+
+    def commit_cache(cache, old_len: jax.Array, accept_idx: jax.Array):
+        """Roll back to old_len + accept_idx + 1 committed tokens.
+
+        ``accept_idx`` (B,) — index (into the T decoded tokens) of the last
+        token to keep.  Attention caches rewind by pointer; SSM caches select
+        the stored per-position state.
+        """
+        blocks = tfm.commit_block_cache(cache["blocks"], accept_idx)
+        new = dict(cache, blocks=blocks)
+        new["len"] = old_len + accept_idx + 1
+        return new
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss_fn=loss_fn,
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        commit_cache=commit_cache,
+        init_cache=init_cache,
+    )

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) layer — full-sequence scan, cached multi-token decode, and
+speculative rollback support.
+
+Speculation × SSM (beyond-paper note): unlike attention, an SSM cannot roll
+back by rewinding a length pointer — the recurrent state at the accepted
+position must be recovered.  ``mamba_decode`` therefore returns the recurrent
+state AFTER EVERY verified token (tiny: (B, T, H, P, N)); the engine's
+``commit`` picks the state at the accepted index.  The conv state is handled
+the same way via a short input-window buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import P, constraint
+from repro.kernels import ops
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_ch
+
+
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    """Input projections are SPLIT (z / xBC / dt) rather than fused: a fused
+    [z|xBC|dt] output sharded on the model axis puts the z/xBC/dt boundaries
+    mid-shard, and GSPMD permute-reshards every slice on every layer
+    (measured: the dominant collective of mamba2 prefill_32k).  Separate
+    projections shard each output cleanly (5120/16, 5376/16, 80/16)."""
+    dtype = jnp.dtype(cfg.dtype)
+    s, d_in, nh, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_z": dense_init(ks[0], cfg.d_model, d_in, ("embed", "inner"), dtype),
+        "in_xbc": dense_init(ks[5], cfg.d_model, conv_ch, ("embed", "conv"), dtype),
+        "in_dt": dense_init(ks[6], cfg.d_model, nh, ("embed", "heads"), dtype),
+        "conv_w": P(
+            (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+            (None, "conv"),
+        ),
+        "conv_b": P(jnp.zeros((conv_ch,), dtype), ("conv",)),
+        "A_log": P(
+            jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+            ("heads",),
+        ),
+        "D": P(jnp.ones((nh,), jnp.float32), ("heads",)),
+        "dt_bias": P(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nh))).astype(jnp.float32),
+            ("heads",),
+        ),
+        "norm": P(jnp.ones((d_in,), dtype), ("inner",)),
+        "out_proj": dense_init(ks[4], d_in, cfg.d_model, ("inner", "embed"), dtype),
+    }
+    return p
+
+
+def _project_in(p: dict, h: jax.Array):
+    """Three shard-aligned input projections (see init_mamba)."""
+    z = jnp.einsum("...d,de->...e", h, p["in_z"])
+    xBC = jnp.einsum("...d,de->...e", h, p["in_xbc"])
+    dt = jnp.einsum("...d,de->...e", h, p["in_dt"])
+    return z, xBC, dt
+
+
+def _causal_conv_full(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence: (B, S, C) with taps (d_conv, C)."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, shape=xBC.shape)
+    S = xBC.shape[1]
+    out = sum(
+        pad[:, i : i + S, :] * w[i][None, None, :] for i in range(d_conv)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_inputs(cfg: ArchConfig, xBC_conv: jax.Array, dt_raw: jax.Array, A_log: jax.Array, dt_bias):
+    s, d_in, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = xBC_conv[..., :d_in]
+    Bm = xBC_conv[..., d_in : d_in + gn]
+    C = xBC_conv[..., d_in + gn :]
+    shp = x.shape[:-1]
+    x = x.reshape(*shp, nh, s.head_dim)
+    Bm = Bm.reshape(*shp, s.n_groups, s.d_state)
+    C = C.reshape(*shp, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias[None, None, :])
+    A = -jnp.exp(A_log)
+    return x, dt, A, Bm, C
+
+
+def mamba_full(p: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    """Full-sequence forward (training / prefill without cache)."""
+    s, d_in, nh, _ = _dims(cfg)
+    z, xBC, dt_raw = _project_in(p, h)
+    xBC = _causal_conv_full(xBC, p["conv_w"], p["conv_b"])
+    x, dt, A, Bm, C = _ssd_inputs(cfg, xBC, dt_raw, p["A_log"], p["dt_bias"])
+    x = constraint(x, ("batch", None, "heads", None))
+    y = ops.ssd_scan(x, dt, A, Bm, C, chunk=s.chunk_size)
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(*y.shape[:2], d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba_prefill(p: dict, cfg: ArchConfig, h: jax.Array) -> Tuple[jax.Array, dict]:
+    """Prefill returning the decode cache (conv window + final SSD state)."""
+    s, d_in, nh, conv_ch = _dims(cfg)
+    z, xBC, dt_raw = _project_in(p, h)
+    conv_win = xBC[:, -(s.d_conv - 1) :, :]  # raw (pre-conv) inputs
+    xBC_c = _causal_conv_full(xBC, p["conv_w"], p["conv_b"])
+    x, dt, A, Bm, C = _ssd_inputs(cfg, xBC_c, dt_raw, p["A_log"], p["dt_bias"])
+    y, state = ops.ssd_scan(x, dt, A, Bm, C, chunk=s.chunk_size, return_state=True)
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(*y.shape[:2], d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    cache = {"conv": conv_win.astype(h.dtype), "state": state.astype(jnp.float32)}
+    return out, cache
+
+
+def mamba_decode(p: dict, cfg: ArchConfig, h: jax.Array, cache: dict) -> Tuple[jax.Array, dict]:
+    """Decode T tokens (T >= 1).  Returns per-position states for rollback.
+
+    cache = {"conv": (B, d_conv-1, C_ch) raw conv inputs,
+             "state": (B, H, P, N) committed SSD state}
+    Output cache adds "states_all": (B, T, H, P, N) and "conv_all":
+    (B, T, d_conv-1, C_ch) so ``commit`` can select the accepted position.
+    """
+    s, d_in, nh, conv_ch = _dims(cfg)
+    B, T, _ = h.shape
+    d_conv = s.d_conv
+    z, xBC, dt_raw = _project_in(p, h)
+    # conv over [cached window ; new tokens]
+    full = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+    w, b = p["conv_w"], p["conv_b"]
+    taps = [full[:, i : i + T, :] * w[i][None, None, :] for i in range(d_conv)]
+    xBC_c = jax.nn.silu(sum(taps) + b[None, None, :])
+    x, dt, A, Bm, C = _ssd_inputs(cfg, xBC_c, dt_raw, p["A_log"], p["dt_bias"])
+
+    # per-token recurrence capturing every intermediate state (T is small)
+    rep = nh // s.n_groups
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp
+        st, yt = ops.ssd_decode_step(st, xt, dtt, A, bt, ct)
+        return st, (st, yt)
+
+    _, (states_all, ys) = jax.lax.scan(
+        step,
+        cache["state"],
+        (
+            x.swapaxes(0, 1),
+            dt.swapaxes(0, 1),
+            Bm.swapaxes(0, 1),
+            C.swapaxes(0, 1),
+        ),
+    )
+    states_all = states_all.swapaxes(0, 1)  # (B,T,H,P,N)
+    y = ys.swapaxes(0, 1)  # (B,T,H,P)
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, T, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+
+    # conv windows after each token: window ending at token t covers raw
+    # inputs [t - d_conv + 2, t]  ->  slice from `full`
+    idx = jnp.arange(T)[:, None] + jnp.arange(d_conv - 1)[None, :] + 1  # (T, d_conv-1)
+    conv_all = full[:, idx, :]  # (B, T, d_conv-1, C_ch)
+    new_cache = {
+        "conv": conv_all[:, -1],
+        "state": states_all[:, -1],
+        "states_all": states_all,
+        "conv_all": conv_all,
+    }
+    return out, new_cache
+
+
+def commit_mamba(cache: dict, accept_idx: jax.Array) -> dict:
+    """Select the state at ``accept_idx`` (B,) — position of the last kept token."""
+    B = cache["states_all"].shape[0]
+    b = jnp.arange(B)
+    return {
+        "conv": cache["conv_all"][b, accept_idx],
+        "state": cache["states_all"][b, accept_idx],
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s, d_in, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,283 @@
+"""Block assembly: scan-over-blocks stacks for every architecture family.
+
+A *block* is ``cfg.scan_block`` consecutive layers.  Blocks are required to be
+structurally identical (asserted at init), are initialised under ``vmap`` so
+their params carry a leading ``layer`` axis, and are applied under
+``lax.scan`` — keeping compiled HLO size O(one block) regardless of depth
+(72-layer Jamba compiles as one 8-layer block scanned 9 times).
+
+Layer kinds come from ``cfg.layer_kinds()`` ("attn" / "ssm"); the MLP of each
+layer is dense or MoE per ``cfg.moe_layer_mask()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import P, constraint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import apply_mlp, init_mlp, init_rms_norm, rms_norm
+
+AUX0 = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _block_pattern(cfg: ArchConfig) -> Tuple[Tuple[str, bool], ...]:
+    """(kind, is_moe) per layer position within a block; validated periodic."""
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    sb = cfg.scan_block
+    assert cfg.n_layers % sb == 0, (cfg.n_layers, sb)
+    pattern = tuple((kinds[i], moe_mask[i]) for i in range(sb))
+    for b in range(cfg.n_layers // sb):
+        got = tuple((kinds[b * sb + i], moe_mask[b * sb + i]) for i in range(sb))
+        assert got == pattern, f"blocks not homogeneous: block {b} {got} != {pattern}"
+    return pattern
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, cross: bool = False) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    pattern = _block_pattern(cfg)
+    block: Dict[str, Any] = {}
+    keys = jax.random.split(key, len(pattern) * 4)
+    for i, (kind, is_moe) in enumerate(pattern):
+        k0, k1, k2, k3 = keys[4 * i : 4 * i + 4]
+        layer: Dict[str, Any] = {"norm1": init_rms_norm(cfg.d_model, dtype)}
+        if kind == "attn":
+            layer["attn"] = attn.init_attention(k0, cfg)
+        else:
+            layer["mamba"] = ssm.init_mamba(k0, cfg)
+        if cross:  # decoder layers of an enc-dec model
+            layer["norm_cross"] = init_rms_norm(cfg.d_model, dtype)
+            layer["cross"] = attn.init_attention(k1, cfg, cross=True)
+        if is_moe:
+            layer["norm2"] = init_rms_norm(cfg.d_model, dtype)
+            layer["moe"] = moe_mod.init_moe(k2, cfg)
+        elif cfg.d_ff > 0:
+            layer["norm2"] = init_rms_norm(cfg.d_model, dtype)
+            layer["mlp"] = init_mlp(k3, cfg, cfg.d_ff)
+        block[str(i)] = layer
+    return block
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    pattern = _block_pattern(cfg)
+    cache: Dict[str, Any] = {}
+    for i, (kind, _) in enumerate(pattern):
+        if kind == "attn":
+            cache[str(i)] = attn.init_decode_cache(cfg, batch, max_len, dtype)
+        else:
+            cache[str(i)] = ssm.init_mamba_cache(cfg, batch, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Block apply (three modes share one layer walker)
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(layer: Dict[str, Any], cfg: ArchConfig, x: jax.Array, aux: Dict) -> Tuple[jax.Array, Dict]:
+    if "moe" in layer:
+        h, losses = moe_mod.apply_moe(layer["moe"], cfg, rms_norm(x, layer["norm2"], cfg.norm_eps))
+        aux = {k: aux[k] + losses[k] for k in aux}
+        return x + h, aux
+    if "mlp" in layer:
+        h = apply_mlp(layer["mlp"], cfg, rms_norm(x, layer["norm2"], cfg.norm_eps))
+        return x + h, aux
+    return x, aux
+
+
+def block_full(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    aux: Dict,
+    *,
+    causal: bool = True,
+    cross_mem: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Full-sequence (training / encoder) pass through one block.
+
+    ``cross_mem`` = (enc_out, mem_len): each decoder layer projects the
+    encoder output through its OWN cross K/V weights.
+    """
+    for i in range(cfg.scan_block):
+        layer = params[str(i)]
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        if "attn" in layer:
+            x = x + attn.attention_full(layer["attn"], cfg, h, positions, causal=causal)
+        else:
+            x = x + ssm.mamba_full(layer["mamba"], cfg, h)
+        if cross_mem is not None:
+            hc = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+            enc_out, mlen = cross_mem
+            mk, mv = attn.cross_memory(layer["cross"], cfg, enc_out)
+            x = x + attn.attention_cross(layer["cross"], cfg, hc, mk, mv, mlen)
+        x, aux = _apply_ffn(layer, cfg, x, aux)
+        x = constraint(x, ("batch", None, "embed"))
+    return x, aux
+
+
+def block_prefill(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    aux: Dict,
+    cache: Dict[str, Any],
+    *,
+    cross_mem: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict, Dict[str, Any]]:
+    """Prefill pass seeding the decode cache (incl. per-layer cross memories)."""
+    S = x.shape[1]
+    new_cache: Dict[str, Any] = {}
+    for i in range(cfg.scan_block):
+        layer = params[str(i)]
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        if "attn" in layer:
+            out, (k, v) = attn.attention_prefill(layer["attn"], cfg, h, positions)
+            x = x + out
+            c = cache[str(i)]
+            cap = c["k"].shape[1]
+            start = jnp.zeros((x.shape[0],), jnp.int32)
+            if cap >= S:
+                ck, cv, cp = attn.write_cache(c["k"], c["v"], c["kv_pos"], k, v, start)
+            else:  # ring buffer smaller than the prompt: keep the tail
+                tail = S - cap
+                ck, cv, cp = attn.write_cache(
+                    c["k"], c["v"], c["kv_pos"], k[:, tail:], v[:, tail:],
+                    start + tail,
+                )
+            nc = {"k": ck, "v": cv, "kv_pos": cp}
+        else:
+            out, nc = ssm.mamba_prefill(layer["mamba"], cfg, h)
+            x = x + out
+        if cross_mem is not None:
+            hc = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+            enc_out, mlen = cross_mem
+            mk, mv = attn.cross_memory(layer["cross"], cfg, enc_out)
+            x = x + attn.attention_cross(layer["cross"], cfg, hc, mk, mv, mlen)
+            nc = dict(nc, cross_k=mk, cross_v=mv)
+        new_cache[str(i)] = nc
+        x, aux = _apply_ffn(layer, cfg, x, aux)
+        x = constraint(x, ("batch", None, "embed"))
+    return x, aux, new_cache
+
+
+def block_decode(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    x: jax.Array,
+    aux: Dict,
+    cache: Dict[str, Any],
+    cache_len: jax.Array,
+    *,
+    mem_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict, Dict[str, Any]]:
+    """Decode T tokens through one block, updating its cache.
+
+    Cross memories (enc-dec) live in the cache ("cross_k"/"cross_v"),
+    precomputed at prefill; ``mem_len`` gives their valid length.
+    """
+    new_cache: Dict[str, Any] = {}
+    for i in range(cfg.scan_block):
+        layer = params[str(i)]
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        c = cache[str(i)]
+        if "attn" in layer:
+            out, nc = attn.attention_decode(
+                layer["attn"], cfg, h, {k: c[k] for k in ("k", "v", "kv_pos")}, cache_len
+            )
+            x = x + out
+        else:
+            out, nc = ssm.mamba_decode(
+                layer["mamba"], cfg, h, {k: c[k] for k in ("conv", "state")}
+            )
+            x = x + out
+        if "cross" in layer:
+            hc = rms_norm(x, layer["norm_cross"], cfg.norm_eps)
+            x = x + attn.attention_cross(
+                layer["cross"], cfg, hc, c["cross_k"], c["cross_v"], mem_len
+            )
+            nc = dict(nc, cross_k=c["cross_k"], cross_v=c["cross_v"])
+        new_cache[str(i)] = nc
+        x, aux = _apply_ffn(layer, cfg, x, aux)
+    return x, aux, new_cache
+
+
+def commit_block_cache(cache: Dict[str, Any], accept_idx: jax.Array) -> Dict[str, Any]:
+    """Roll a block cache back to the accepted position (stacked over blocks)."""
+    out: Dict[str, Any] = {}
+    for key, c in cache.items():
+        if "states_all" in c:
+            # leaves carry a leading n_blocks axis -> vmap the per-layer commit
+            out[key] = jax.vmap(ssm.commit_mamba, in_axes=(0, None))(c, accept_idx)
+        else:
+            out[key] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stacks: vmapped init + scanned apply
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg: ArchConfig, n_blocks: int, cross: bool = False):
+    keys = jax.random.split(key, n_blocks)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, cross=cross))(keys)
+    # re-tag logical axes with the leading "layer" axis
+    def retag(p: P) -> P:
+        return P(p.value, ("layer",) + tuple(p.axes))
+
+    return jax.tree.map(retag, stacked, is_leaf=lambda x: isinstance(x, P))
+
+
+def _remat(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def scan_full(stacked, cfg: ArchConfig, x, positions, *, causal=True, cross_mem=None, remat="none"):
+    def body(carry, bp):
+        x, aux = carry
+        x, aux = block_full(bp, cfg, x, positions, aux, causal=causal, cross_mem=cross_mem)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat(body, remat), (x, dict(AUX0)), stacked)
+    return x, aux
+
+
+def scan_prefill(stacked, cfg: ArchConfig, x, positions, cache, *, cross_mem=None):
+    def body(carry, inp):
+        x, aux = carry
+        bp, bc = inp
+        x, aux, nc = block_prefill(bp, cfg, x, positions, aux, bc, cross_mem=cross_mem)
+        return (x, aux), nc
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, dict(AUX0)), (stacked, cache))
+    return x, aux, new_cache
+
+
+def scan_decode(stacked, cfg: ArchConfig, x, cache, cache_len, *, mem_len=None):
+    def body(carry, inp):
+        x, aux = carry
+        bp, bc = inp
+        x, aux, nc = block_decode(bp, cfg, x, aux, bc, cache_len, mem_len=mem_len)
+        return (x, aux), nc
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, dict(AUX0)), (stacked, cache))
+    return x, new_cache

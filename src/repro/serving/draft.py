@@ -1,0 +1,103 @@
+"""Draft models for speculative decoding.
+
+Two providers:
+
+* :class:`ModelDraft` — a small transformer (same vocab) built with
+  ``build_model``; the production path (EAGLE-class drafts map here on TPU;
+  see DESIGN.md §2).  Keeps its own KV cache with the same commit/rollback
+  protocol as the target.
+* :class:`NGramDraft` — suffix-matching n-gram proposer over the request's
+  own history (prompt + generated).  Stateless on device, zero extra FLOPs;
+  used by CPU tests and as the low-cost fallback lane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.serving.sampling import sample_probs, token_probs
+
+
+class ModelDraft:
+    """Small-transformer draft with its own cache (teacher-forced generate)."""
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_len = max_len
+        self.cache = None
+        self._decode = jax.jit(self.model.decode_step)
+        self._commit = jax.jit(self.model.commit_cache)
+
+    def prefill(self, batch) -> None:
+        _, self.cache = jax.jit(self.model.prefill, static_argnames=("max_len",))(
+            self.params, batch, max_len=self.max_len
+        )
+
+    def propose(
+        self, key, pending: jax.Array, k: int, temperature: float = 0.0
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Generate k tokens after `pending` (B,).  Returns (tokens (B,k), q (B,k))."""
+        toks: List[jax.Array] = []
+        qs: List[jax.Array] = []
+        cur = pending[:, None]
+        old_len = self.cache["len"]
+        for i in range(k):
+            key, sk = jax.random.split(key)
+            logits, self.cache = self._decode(self.params, self.cache, cur)
+            t, q = sample_probs(sk, logits[:, -1], temperature)
+            toks.append(t)
+            qs.append(q)
+            cur = t[:, None]
+        # cache now holds pending + k-1 draft tokens; rollback happens in sync()
+        self._old_len = old_len
+        return jnp.stack(toks, 1), jnp.stack(qs, 1)
+
+    def sync(self, accept_idx: jax.Array) -> None:
+        """Roll the draft cache back to match the target's committed state."""
+        self.cache = self._commit(self.cache, self._old_len, accept_idx)
+
+
+@dataclasses.dataclass
+class NGramDraft:
+    """Suffix-match n-gram draft over per-sequence token history.
+
+    For each sequence, find the longest suffix (up to ``max_ngram``) of the
+    current context that re-occurs earlier in the history and propose the
+    tokens that followed it.  q(token) = 1.0 (deterministic proposal), which
+    makes the Leviathan ratio p/q = p — acceptance equals the target's own
+    confidence in the proposed token.
+    """
+
+    max_ngram: int = 4
+    vocab_size: int = 32000
+
+    def propose_one(self, history: List[int], k: int) -> List[int]:
+        h = history
+        n = len(h)
+        for g in range(min(self.max_ngram, n - 1), 0, -1):
+            suffix = h[n - g :]
+            # search latest earlier occurrence
+            for s in range(n - g - 1, -1, -1):
+                if h[s : s + g] == suffix:
+                    cont = h[s + g : s + g + k]
+                    if cont:
+                        out = list(cont)
+                        while len(out) < k:
+                            out.append(out[-1])
+                        return out
+        # no match: propose repeats of the last token (cheap, usually rejected)
+        last = h[-1] if h else 0
+        return [last] * k
+
+    def propose(self, histories: List[List[int]], k: int) -> Tuple[np.ndarray, np.ndarray]:
+        toks = np.stack([np.array(self.propose_one(h, k), np.int32) for h in histories])
+        qs = np.ones_like(toks, np.float32)
+        return toks, qs

@@ -1,0 +1,58 @@
+"""Request lifecycle objects shared by the real engine and the simulator."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional, Sequence
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    TRANSFERRING = "transferring"   # KV handoff prefill -> decode lane
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    temperature: float = 0.0        # 0 = greedy
+    top_k: int = 0                  # 0 = off
+    top_p: float = 1.0
+    max_new_tokens: int = 128
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    request_id: str = dataclasses.field(default_factory=lambda: f"req-{next(_ids)}")
+    arrival_time: float = 0.0
+    # runtime state ----------------------------------------------------------
+    state: RequestState = RequestState.QUEUED
+    worker_id: int = -1
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    t_prefill_start: float = 0.0
+    t_prefill_end: float = 0.0
+    t_first_token: float = 0.0
+    t_end: float = 0.0
+    error: Optional[str] = None
+    # provenance for prefix caching
+    cache_hit_tokens: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    def is_done(self) -> bool:
+        if len(self.output_tokens) >= self.params.max_new_tokens:
+            return True
+        eos = self.params.eos_token
+        return eos is not None and len(self.output_tokens) > 0 and self.output_tokens[-1] == eos

@@ -1,0 +1,80 @@
+"""Token sampling in JAX: greedy / temperature / top-k / top-p.
+
+All functions take fp32 logits (B, V) and are jit-safe with static
+hyper-parameters.  ``sample_probs`` returns both the token and the
+probability the sampler assigned to it — the draft probability q(x) needed by
+speculative verification.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    vals, _ = jax.lax.top_k(logits, k)
+    thresh = vals[..., -1:]
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep the smallest set of tokens with cumulative prob >= p
+    cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
+def adjust_logits(logits: jax.Array, temperature: float, top_k: int, top_p: float) -> jax.Array:
+    """Sampling-distribution logits (greedy handled by caller)."""
+    logits = logits / max(temperature, 1e-6)
+    logits = apply_top_k(logits, top_k)
+    logits = apply_top_p(logits, top_p)
+    return logits
+
+
+def token_probs(logits: jax.Array, temperature: float, top_k: int, top_p: float) -> jax.Array:
+    """Full sampling distribution p(·) as probabilities (B, V)."""
+    if temperature <= 0.0:
+        # greedy == one-hot argmax distribution
+        return jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1], dtype=jnp.float32)
+    return jax.nn.softmax(adjust_logits(logits, temperature, top_k, top_p), axis=-1)
+
+
+def sample(
+    key: jax.Array,
+    logits: jax.Array,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> jax.Array:
+    """Sample token ids (B,) from (B, V) logits."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, adjust_logits(logits, temperature, top_k, top_p), axis=-1)
+
+
+def sample_probs(
+    key: jax.Array,
+    logits: jax.Array,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sample and return (token (B,), q(token) (B,))."""
+    probs = token_probs(logits, temperature, top_k, top_p)
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+    else:
+        tok = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)), axis=-1)
+    q = jnp.take_along_axis(probs, tok[:, None], axis=-1)[:, 0]
+    return tok, q

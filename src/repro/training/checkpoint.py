@@ -1,0 +1,142 @@
+"""Topology-independent checkpointing.
+
+Checkpoints store FULL (unsharded) arrays, one ``.npy`` per leaf plus a
+JSON manifest, under ``step_<n>/`` with an atomic ``LATEST`` pointer —
+restore works on any mesh shape (elastic restarts: 512 -> 256 chips and
+back), because sharding is re-applied from the logical-axis rules at load
+time, not baked into the files.
+
+Write protocol (crash-safe):
+  1. write into ``step_<n>.tmp/``
+  2. fsync files, rename to ``step_<n>/``      (atomic on POSIX)
+  3. rewrite ``LATEST`` (atomic via rename)
+
+``keep`` old checkpoints are retained for rollback (straggler-corrupted or
+loss-spiked steps can restore an older step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any]) -> pathlib.Path:
+        """state: pytrees (params / opt_state / data_state / metadata)."""
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+        for group, tree in state.items():
+            if tree is None:
+                continue
+            if group == "meta":
+                manifest["meta"] = tree
+                continue
+            leaves, _ = _flatten(tree)
+            for key, leaf in leaves:
+                arr = np.asarray(jax.device_get(leaf))
+                dtype = str(arr.dtype)
+                if arr.dtype.kind == "V" or dtype == "bfloat16":
+                    # numpy can't persist ml_dtypes types; store widened
+                    arr = arr.astype(np.float32)
+                fname = f"{group}__{key.replace('/', '__')}.npy"
+                np.save(tmp / fname, arr)
+                manifest["leaves"][f"{group}/{key}"] = {
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": dtype,
+                }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._write_latest(step)
+        self._gc()
+        return final
+
+    def _write_latest(self, step: int) -> None:
+        tmp = self.dir / "LATEST.tmp"
+        tmp.write_text(str(step))
+        tmp.rename(self.dir / "LATEST")
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        ptr = self.dir / "LATEST"
+        if ptr.exists():
+            s = int(ptr.read_text().strip())
+            if (self.dir / f"step_{s:08d}").exists():
+                return s
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, templates: Dict[str, Any], step: Optional[int] = None
+    ) -> Tuple[int, Dict[str, Any]]:
+        """Restore into the structure of ``templates`` (same pytrees passed
+        to save; leaf values are only used for structure)."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoint under {self.dir}"
+        path = self.dir / f"step_{step:08d}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        out: Dict[str, Any] = {}
+        for group, tree in templates.items():
+            if tree is None:
+                out[group] = None
+                continue
+            if group == "meta":
+                out["meta"] = manifest.get("meta", {})
+                continue
+            leaves, treedef = _flatten(tree)
+            vals = []
+            for key, _ in leaves:
+                entry = manifest["leaves"][f"{group}/{key}"]
+                arr = np.load(path / entry["file"])
+                if str(arr.dtype) != entry["dtype"]:
+                    import ml_dtypes  # cast widened leaves back (bfloat16 &c)
+
+                    arr = arr.astype(np.dtype(entry["dtype"]))
+                vals.append(arr)
+            out[group] = jax.tree_util.tree_unflatten(treedef, vals)
+        return step, out

@@ -1,0 +1,186 @@
+"""Optimizers (pure JAX — optax is not available in this environment).
+
+* :func:`adamw` — standard AdamW with decoupled weight decay.
+* :func:`adafloor` — Adafactor-style factored second moment + momentum-free
+  update.  Used by very large configs (jamba-398b): optimizer state is
+  ~0.5 byte/param instead of AdamW's 8, which is what lets a 398B model train
+  on a 256-chip v5e pod (16 GB HBM/chip) — see DESIGN.md §4.
+
+Both return ``(init_fn, update_fn)`` with the optax-like contract:
+``state = init(params)``; ``updates, state = update(grads, state, params)``.
+Optimizer state inherits each parameter's logical sharding axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # adafloor
+    factored_min_dim: int = 128
+    clip_rms: float = 1.0
+    # global grad clipping
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to ``min_lr_frac``."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw(cfg: OptConfig):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32), jax.tree.map(zeros, params), jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        lr = lr_schedule(cfg, step)
+        b1, b2 = cfg.beta1, cfg.beta2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1**step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2**step), nu)
+
+        def upd(p, m, v):
+            u = m / (jnp.sqrt(v) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu_hat, nu_hat)
+        return updates, AdamWState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafloor (adafactor-style, factored second moment)
+# ---------------------------------------------------------------------------
+
+
+class AdafloorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row stats (factored) or full v (small tensors)
+    vc: Any   # col stats (factored) or () placeholder
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+def adafloor(cfg: OptConfig):
+    def init(params):
+        def vr_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafloorState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(vr_init, params),
+            jax.tree.map(vc_init, params),
+        )
+
+    def update(grads, state: AdafloorState, params):
+        step = state.step + 1
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        lr = lr_schedule(cfg, step)
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + 1e-30
+            if _factored(p):
+                vr_n = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc_n = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                denom = (
+                    vr_n[..., None]
+                    * vc_n[..., None, :]
+                    / jnp.maximum(vr_n.mean(axis=-1)[..., None, None], 1e-30)
+                )
+                u = g * jax.lax.rsqrt(denom + 1e-30)
+            else:
+                vr_n = decay * vr + (1 - decay) * g2
+                vc_n = vc
+                u = g * jax.lax.rsqrt(vr_n + 1e-30)
+            # update clipping (Adafactor's RMS trick)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / cfg.clip_rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), vr_n, vc_n
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        vrflat = treedef.flatten_up_to(state.vr)
+        vcflat = treedef.flatten_up_to(state.vc)
+        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat, gflat, vrflat, vcflat)]
+        updates = treedef.unflatten([o[0] for o in out])
+        vr = treedef.unflatten([o[1] for o in out])
+        vc = treedef.unflatten([o[2] for o in out])
+        return updates, AdafloorState(step, vr, vc), {"grad_norm": gnorm, "lr": lr}
+
+    return init, update
+
+
+def make_optimizer(name: str, cfg: Optional[OptConfig] = None):
+    cfg = cfg or OptConfig()
+    if name == "adamw":
+        return adamw(cfg)
+    if name == "adafloor":
+        return adafloor(cfg)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

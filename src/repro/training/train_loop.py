@@ -1,0 +1,88 @@
+"""Training step factory: loss → grads → (optional compression) → optimizer.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch, step_rng) -> (params, opt_state, metrics)``
+suitable for pjit.  Gradient compression (int8 + error feedback) is a
+beyond-paper large-scale feature — see distributed/compression.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.training.optimizer import OptConfig, apply_updates, make_optimizer
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: Optional[OptConfig] = None,
+    compression=None,
+) -> Tuple[Callable, Callable]:
+    """Returns (init_opt_state, train_step).
+
+    With ``compression`` (a GradientCompressor), the opt state gains an
+    error-feedback tree and gradients take the int8 round trip before the
+    optimizer — the cross-pod wire format (distributed/compression.py).
+    """
+    opt_init, opt_update = make_optimizer(model.cfg.optimizer, opt_cfg or OptConfig())
+
+    def init_opt_state(params):
+        state = opt_init(params)
+        if compression is not None:
+            return (state, compression.init_error(params))
+        return state
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        if compression is not None:
+            opt_state, err = opt_state
+            grads, err = compression.compress_decompress(grads, err)
+        updates, opt_state, opt_metrics = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if compression is not None:
+            opt_state = (opt_state, err)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    return init_opt_state, train_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state logical axes (for sharding the state like the params)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_axes(opt_name: str, params_axes: Any, params_shapes: Any):
+    """Logical-axes pytree matching the optimizer state structure."""
+    from repro.training.optimizer import AdafloorState, AdamWState, _factored
+
+    scalar = ()
+    if opt_name == "adamw":
+        return AdamWState(step=scalar, mu=params_axes, nu=params_axes)
+    if opt_name == "adafloor":
+        def vr_axes(ax, shp):
+            return tuple(ax[:-1]) if _like_factored(shp) else tuple(ax)
+
+        def vc_axes(ax, shp):
+            return tuple(ax[:-2]) + (tuple(ax)[-1],) if _like_factored(shp) else (None,)
+
+        vr = jax.tree.map(vr_axes, params_axes, params_shapes, is_leaf=_is_axes)
+        vc = jax.tree.map(vc_axes, params_axes, params_shapes, is_leaf=_is_axes)
+        return AdafloorState(step=scalar, vr=vr, vc=vc)
+    raise ValueError(opt_name)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def _like_factored(shape) -> bool:
+    shape = getattr(shape, "shape", shape)
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128

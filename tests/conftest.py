@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own 512-way
+# host-device override in a subprocess; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

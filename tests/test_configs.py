@@ -1,0 +1,104 @@
+"""Assigned-architecture configs match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, reduced_config
+from repro.configs.base import SHAPES, shape_applicable
+
+# (layers, d_model, heads, kv, d_ff, vocab) straight from the assignment
+SPEC = {
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50_280),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151_936),
+    "qwen2.5-14b": (48, 5120, 40, 8, 13_824, 152_064),
+    "starcoder2-7b": (32, 4608, 36, 4, 18_432, 49_152),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10_240, 32_000),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151_655),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24_576, 65_536),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14_336, 32_000),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151_936),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256_206),
+}
+
+
+def test_all_assigned_present():
+    assert set(ASSIGNED) == set(SPEC)
+    assert "llama2-7b" in ARCHS  # the paper's own model
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, H, K, ff, V = SPEC[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == K
+    if cfg.family == "moe":
+        assert cfg.moe is not None and cfg.moe.d_ff_expert == ff
+    elif ff:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+
+
+def test_family_features():
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("jamba-1.5-large-398b").moe.n_experts == 16
+    assert get_config("jamba-1.5-large-398b").moe.top_k == 2
+    assert get_config("jamba-1.5-large-398b").attn_period == 8  # 1:7 interleave
+    assert get_config("mixtral-8x7b").moe.n_experts == 8
+    assert get_config("qwen3-moe-30b-a3b").moe.n_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").moe.top_k == 8
+    assert get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen2.5-14b").qkv_bias
+    assert get_config("h2o-danube-3-4b").sliding_window is not None
+    assert get_config("internvl2-1b").frontend.kind == "vision"
+    assert get_config("seamless-m4t-large-v2").n_encoder_layers == 24
+
+
+def test_long_500k_applicability():
+    """DESIGN.md §Arch-applicability: skip for pure full-attention archs,
+    run for ssm/hybrid/SWA."""
+    runnable = {
+        a for a in ASSIGNED
+        if shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+    }
+    assert runnable == {
+        "mamba2-2.7b", "jamba-1.5-large-398b", "h2o-danube-3-4b", "mixtral-8x7b",
+    }
+
+
+def test_padding_properties():
+    q25 = get_config("qwen2.5-14b")
+    assert q25.padded_heads == 48 and q25.padded_heads % 16 == 0
+    sc = get_config("starcoder2-7b")
+    assert sc.padded_heads == 48
+    for a in ("qwen3-1.7b", "mixtral-8x7b", "jamba-1.5-large-398b"):
+        cfg = get_config(a)
+        assert cfg.padded_heads == cfg.n_heads  # divisible: no padding
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_param_counts_plausible():
+    """Total params within expected magnitude for the headline sizes."""
+    expect = {
+        "mamba2-2.7b": (2.2e9, 3.3e9),
+        "qwen2.5-14b": (12e9, 16e9),
+        "mixtral-8x7b": (42e9, 52e9),
+        "jamba-1.5-large-398b": (330e9, 450e9),
+        "qwen3-moe-30b-a3b": (25e9, 35e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active < total
+    for arch in ("mixtral-8x7b", "qwen3-moe-30b-a3b", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        assert cfg.n_active_params() < 0.5 * cfg.n_params()
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_reduced_configs_are_small(arch):
+    red = reduced_config(arch)
+    assert red.n_params() < 5e7
+    assert red.family == get_config(arch).family

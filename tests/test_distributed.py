@@ -1,0 +1,218 @@
+"""Sharding rules, collectives (shard_map on a CPU sub-mesh), compression,
+checkpointing and fault-tolerance substrate tests."""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.distributed.compression import CompressionConfig, GradientCompressor
+from repro.distributed.fault_tolerance import (
+    HealthTracker,
+    StragglerDetector,
+    TrainSupervisor,
+)
+from repro.distributed.sharding import DEFAULT_RULES, P, logical_to_spec, unzip_params
+from repro.training.checkpoint import CheckpointManager
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+# ---------------------------------------------------------------------------
+# logical -> PartitionSpec resolution
+# ---------------------------------------------------------------------------
+
+
+def test_rules_basic_mapping():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    spec = logical_to_spec(("embed", "heads", None), mesh, shape=(4096, 32, 128))
+    assert spec == PS("data", "model")
+
+
+def test_rules_drop_indivisible():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # 40 heads % 16 != 0 -> replicated, embed still sharded
+    spec = logical_to_spec(("embed", "heads", None), mesh, shape=(5120, 40, 128))
+    assert spec == PS("data")
+
+
+def test_rules_drop_small_dims():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    spec = logical_to_spec(("kv", None), mesh, shape=(8, 128))  # 8 kv heads < 16
+    assert spec == PS()
+
+
+def test_rules_no_axis_reuse():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # both dims want "model": second one must not reuse it
+    spec = logical_to_spec(("heads", "mlp"), mesh, shape=(32, 256))
+    assert spec == PS("model")
+
+
+def test_rules_missing_mesh_axis_dropped():
+    mesh = _FakeMesh({"data": 4, "model": 4})  # no "pod"
+    spec = logical_to_spec(("batch", None), mesh, shape=(256, 128))
+    assert spec == PS("data")
+
+
+# ---------------------------------------------------------------------------
+# collectives under shard_map (needs >= 2 host devices: skip on 1)
+# ---------------------------------------------------------------------------
+
+
+def test_lse_merge_equals_full_softmax():
+    from repro.distributed.collectives import lse_merge  # noqa: F401
+    # pure-math check without a mesh: emulate 2 shards manually
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)   # logits
+    v = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    full = jax.nn.softmax(s, -1) @ v
+
+    halves = []
+    for sl in (slice(0, 32), slice(32, 64)):
+        m = s[:, sl].max(-1)
+        p = jnp.exp(s[:, sl] - m[:, None])
+        l = p.sum(-1)
+        num = p @ v[sl]
+        halves.append((num, m, l))
+    # closed-form merge (what lse_merge's psum computes across shards)
+    m_g = jnp.maximum(halves[0][1], halves[1][1])
+    num_g = sum(n * jnp.exp(m - m_g)[:, None] for n, m, _ in halves)
+    l_g = sum(l * jnp.exp(m - m_g) for _, m, l in halves)
+    merged = num_g / l_g[:, None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_compression_roundtrip_error_small():
+    gc = GradientCompressor(CompressionConfig(min_size=16))
+    rng = np.random.default_rng(1)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)}
+    err = gc.init_error(grads)
+    out, err = gc.compress_decompress(grads, err)
+    rel = float(
+        jnp.linalg.norm(out["w"] - grads["w"]) / jnp.linalg.norm(grads["w"])
+    )
+    assert rel < 0.01
+
+
+def test_error_feedback_unbiased_accumulation():
+    """Sum of compressed grads + final residual == sum of raw grads —
+    error feedback never loses mass."""
+    gc = GradientCompressor(CompressionConfig(min_size=16))
+    rng = np.random.default_rng(2)
+    g_raw = [jnp.asarray(rng.normal(size=(32, 64)), jnp.float32) for _ in range(20)]
+    err = gc.init_error({"w": g_raw[0]})
+    total_out = jnp.zeros_like(g_raw[0])
+    for g in g_raw:
+        out, err = gc.compress_decompress({"w": g}, err)
+        total_out = total_out + out["w"]
+    total_raw = sum(g_raw)
+    np.testing.assert_allclose(
+        np.asarray(total_out + err["w"]), np.asarray(total_raw), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_compression_small_tensors_passthrough():
+    gc = GradientCompressor(CompressionConfig(min_size=10_000))
+    g = {"b": jnp.ones((8,), jnp.float32)}
+    err = gc.init_error(g)
+    out, _ = gc.compress_decompress(g, err)
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.asarray(g["b"]))
+
+
+def test_wire_bytes_4x():
+    gc = GradientCompressor(CompressionConfig(min_size=16))
+    g = {"w": jnp.zeros((1024, 1024), jnp.float32)}
+    raw, comp = gc.wire_bytes(g)
+    assert raw / comp > 3.9
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    state = {
+        "params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.float32)},
+        "meta": {"stream": {"step": 7}},
+    }
+    ckpt.save(10, state)
+    step, restored = ckpt.restore({"params": state["params"], "meta": {}})
+    assert step == 10
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(state["params"]["w"], np.float32),
+    )
+    assert restored["meta"]["stream"]["step"] == 7
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30, 40):
+        ckpt.save(s, {"params": {"w": jnp.full((2,), s, jnp.float32)}})
+    assert ckpt.latest_step() == 40
+    assert ckpt.steps() == [30, 40]  # older GC'd
+    step, restored = ckpt.restore({"params": {"w": jnp.zeros((2,))}}, step=30)
+    assert float(restored["params"]["w"][0]) == 30.0
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(5, {"params": {"w": jnp.zeros((2, 2))}})
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance primitives
+# ---------------------------------------------------------------------------
+
+
+def test_health_tracker_death_and_recovery():
+    ht = HealthTracker(3, dead_after=1.0)
+    for w in range(3):
+        ht.heartbeat(w, now=0.0)
+    assert ht.sweep(now=0.5) == []
+    ht.heartbeat(0, now=1.2)
+    ht.heartbeat(1, now=1.2)
+    assert ht.sweep(now=1.8) == [2]
+    assert ht.alive() == [0, 1]
+    ht.heartbeat(2, now=2.0)
+    assert ht.state[2].alive and ht.state[2].incarnation == 1
+
+
+def test_straggler_detector():
+    sd = StragglerDetector(4, threshold=1.5)
+    for _ in range(10):
+        for w in range(3):
+            sd.observe(w, 0.1)
+        sd.observe(3, 0.5)
+    assert sd.stragglers() == [3]
+
+
+def test_train_supervisor_restart_determinism(tmp_path):
+    """Training with an injected crash reaches the SAME final state as an
+    uninterrupted run (checkpoint + deterministic data replay)."""
+    from repro.launch.train import main
+
+    r1 = main(["--steps", "18", "--ckpt-dir", str(tmp_path / "a"),
+               "--ckpt-every", "5", "--arch", "qwen3-1.7b"])
+    r2 = main(["--steps", "18", "--ckpt-dir", str(tmp_path / "b"),
+               "--ckpt-every", "5", "--fail-at", "9", "--arch", "qwen3-1.7b"])
+    assert r2["report"].restarts == 1
+    assert abs(r1["final_loss"] - r2["final_loss"]) < 1e-4

@@ -1,0 +1,160 @@
+"""Multi-device equivalence tests for the beyond-paper distributed paths.
+
+These run in a SUBPROCESS with ``--xla_force_host_platform_device_count=4``
+(a (2,2) data×model mesh of host devices) so the shard_map paths execute
+with real collectives, and their outputs are compared against the
+single-device reference computation.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    out = {}
+
+    # ---------------- MoE: shard_map vs global dispatch ----------------
+    from repro.configs import reduced_config
+    from repro.models import moe as M
+    import dataclasses
+    cfg = reduced_config("mixtral-8x7b")
+    p = M.init_moe(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda q: q.value if hasattr(q, "value") else q, p,
+                     is_leaf=lambda x: hasattr(x, "value"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)) * 0.5, jnp.float32)
+
+    ref, _ = M.apply_moe_global(p, cfg, x, capacity_factor=8.0)
+
+    with mesh:
+        xs = jax.device_put(x, NamedSharding(mesh, PS("data", None, None)))
+        ps = jax.tree.map(
+            lambda w: jax.device_put(w, NamedSharding(mesh, PS("model", None, None)))
+            if w.ndim == 3 else jax.device_put(w, NamedSharding(mesh, PS())),
+            p,
+        )
+        got, _ = jax.jit(
+            lambda pp, xx: M.apply_moe_shardmap(pp, cfg, xx, capacity_factor=8.0)
+        )(ps, xs)
+    out["moe_err"] = float(jnp.abs(ref.astype(jnp.float32) - got.astype(jnp.float32)).max())
+
+    # --- capacity-split path: E (=2) < n_model (=4, mesh (1,4)) -------------
+    from repro.configs.base import MoEConfig
+    cfg2 = dataclasses.replace(
+        cfg, moe=MoEConfig(n_experts=2, top_k=1, d_ff_expert=64)
+    )
+    p2 = M.init_moe(jax.random.PRNGKey(1), cfg2)
+    p2 = jax.tree.map(lambda q: q.value if hasattr(q, "value") else q, p2,
+                      is_leaf=lambda x: hasattr(x, "value"))
+    ref2, _ = M.apply_moe_global(p2, cfg2, x, capacity_factor=8.0)
+    mesh2 = jax.make_mesh((1, 4), ("data", "model"))
+    with mesh2:
+        xs2 = jax.device_put(x, NamedSharding(mesh2, PS("data", None, None)))
+        ps2 = jax.tree.map(
+            lambda w: jax.device_put(w, NamedSharding(mesh2, PS())), p2
+        )
+        got2m, _ = jax.jit(
+            lambda pp, xx: M.apply_moe_shardmap(pp, cfg2, xx, capacity_factor=8.0)
+        )(ps2, xs2)
+    out["moe_split_err"] = float(
+        jnp.abs(ref2.astype(jnp.float32) - got2m.astype(jnp.float32)).max()
+    )
+
+    # ---------------- context-parallel decode attention ----------------
+    from repro.models import attention as A
+    from repro.kernels import ref as R
+    acfg = reduced_config("qwen3-1.7b")
+    B, T, S = 2, 3, 32
+    H, K, D = 4, 2, 32
+    acfg = dataclasses.replace(acfg, n_heads=H, n_kv_heads=K, head_dim=D)
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(B, T, K, D)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(B, S, K, D)), jnp.float32)
+    clen = jnp.asarray([10, 17], jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    cp = jnp.where(pos < clen[:, None], pos, -1)
+    cache = {"k": ck, "v": cv, "kv_pos": cp}
+
+    # reference: plain write + ref decode attention
+    ck2, cv2, cp2 = A.write_cache(ck, cv, cp, kn, vn, clen)
+    want = R.decode_attention(q, ck2, cv2, clen + T, kv_positions=cp2)
+
+    with mesh:
+        qd = jax.device_put(q, NamedSharding(mesh, PS("data", None, None, None)))
+        cached = {
+            "k": jax.device_put(ck, NamedSharding(mesh, PS("data", "model", None, None))),
+            "v": jax.device_put(cv, NamedSharding(mesh, PS("data", "model", None, None))),
+            "kv_pos": jax.device_put(cp, NamedSharding(mesh, PS("data", "model"))),
+        }
+        knd = jax.device_put(kn, NamedSharding(mesh, PS("data", None, None, None)))
+        vnd = jax.device_put(vn, NamedSharding(mesh, PS("data", None, None, None)))
+        cl = jax.device_put(clen, NamedSharding(mesh, PS("data")))
+        got_out, new_cache = jax.jit(
+            lambda *a: A._decode_attention_cp(mesh, acfg, *a)
+        )(qd, knd, vnd, cached, cl)
+    out["cp_attn_err"] = float(jnp.abs(want - got_out).max())
+    out["cp_cache_err"] = float(jnp.abs(jnp.sort(new_cache["kv_pos"], -1)
+                                        - jnp.sort(cp2, -1)).max())
+
+    # ---------------- hierarchical all-reduce ----------------
+    from repro.distributed.collectives import hierarchical_all_reduce
+    import functools
+    y = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    with jax.set_mesh(jax.make_mesh((2, 2), ("pod", "data"))):
+        m2 = jax.make_mesh((2, 2), ("pod", "data"))
+        f = jax.shard_map(
+            lambda v: hierarchical_all_reduce(v, "pod", "data"),
+            mesh=m2, in_specs=PS("pod", "data"), out_specs=PS("pod", "data"),
+            check_vma=False,
+        )
+        got2 = f(y)
+    # psum over both axes of each shard == full sum replicated; compare via sum
+    out["har_err"] = float(jnp.abs(jnp.sum(got2) - 4 * jnp.sum(y)).max())
+
+    print(json.dumps(out))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), env=env,
+        timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_moe_shardmap_matches_global(results):
+    assert results["moe_err"] < 1e-4, results
+
+
+def test_moe_capacity_split_matches_global(results):
+    """E < n_model: each shard owns a capacity slice of one expert."""
+    assert results["moe_split_err"] < 1e-4, results
+
+
+def test_context_parallel_decode_matches_ref(results):
+    assert results["cp_attn_err"] < 1e-4, results
+    assert results["cp_cache_err"] == 0.0, results
+
+
+def test_hierarchical_all_reduce(results):
+    assert abs(results["har_err"]) < 1e-3, results

@@ -1,0 +1,130 @@
+"""FlowGuard unit + hypothesis property tests (paper Eq 1-4, Alg 2)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flowguard import FlowGuard, FlowGuardConfig, RoundRobinRouter
+from repro.core.metrics import WorkerMetrics
+
+
+def _m(wid, cache=0.0, mem=0.0, q=0, load=0.0, ts=100.0):
+    return WorkerMetrics(
+        worker_id=wid, cache_hit_rate=cache, memory_utilization=mem,
+        queue_depth=q, active_load=load, timestamp=ts,
+    )
+
+
+def test_score_formula_eq1():
+    fg = FlowGuard()
+    m = _m(0, cache=0.5, mem=0.2, q=4, load=0.3)
+    # alpha = (0.4, 0.1, 0.3, 0.2), q_max = 16
+    want = 0.4 * 0.5 + 0.1 * 0.8 + 0.3 * (1 - 4 / 16) + 0.2 * 0.7
+    assert math.isclose(fg.score(m), want, rel_tol=1e-9)
+
+
+def test_weights_must_sum_to_one():
+    with pytest.raises(ValueError):
+        FlowGuardConfig(alpha_cache=0.5, alpha_memory=0.5, alpha_queue=0.5, alpha_load=0.5)
+
+
+def test_overload_eq2_eq3():
+    fg = FlowGuard()
+    # omega = M + 2 * q/q_max; tau = 0.85
+    assert not fg.is_overloaded(_m(0, mem=0.5, q=2))      # 0.5 + 0.25 = 0.75
+    assert fg.is_overloaded(_m(0, mem=0.5, q=4))          # 0.5 + 0.5  = 1.0
+    assert fg.is_overloaded(_m(0, mem=0.9, q=0))          # memory alone
+    assert fg.is_overloaded(_m(0, mem=0.0, q=8))          # queue alone (1.0)
+
+
+def test_select_prefers_higher_score():
+    fg = FlowGuard()
+    metrics = {0: _m(0, cache=0.9, q=0), 1: _m(1, cache=0.1, q=0)}
+    best, scores = fg.select(metrics, now=100.0)
+    assert best == 0 and scores[0] > scores[1]
+
+
+def test_select_excludes_overloaded():
+    fg = FlowGuard()
+    metrics = {0: _m(0, cache=1.0, mem=0.9, q=8), 1: _m(1, cache=0.0)}
+    best, _ = fg.select(metrics, now=100.0)
+    assert best == 1
+
+
+def test_fallback_min_queue_when_all_overloaded():
+    """Eq 4: every worker overloaded -> argmin queue depth."""
+    fg = FlowGuard()
+    metrics = {0: _m(0, mem=0.9, q=9), 1: _m(1, mem=0.9, q=7), 2: _m(2, mem=0.95, q=8)}
+    best, scores = fg.select(metrics, now=100.0)
+    assert best == 1 and scores == {}
+
+
+def test_stale_metrics_excluded():
+    fg = FlowGuard()
+    metrics = {0: _m(0, cache=1.0, ts=0.0), 1: _m(1, cache=0.0, ts=100.0)}
+    best, _ = fg.select(metrics, now=100.0)  # worker 0 is 100s stale
+    assert best == 1
+
+
+def test_healthy_filter():
+    fg = FlowGuard()
+    metrics = {0: _m(0, cache=1.0), 1: _m(1, cache=0.0)}
+    best, _ = fg.select(metrics, now=100.0, healthy=[1])
+    assert best == 1
+
+
+def test_round_robin_cycles():
+    rr = RoundRobinRouter()
+    metrics = {0: _m(0), 1: _m(1), 2: _m(2)}
+    picks = [rr.select(metrics, 0.0)[0] for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+metric_st = st.builds(
+    _m,
+    wid=st.integers(0, 7),
+    cache=st.floats(0, 1),
+    mem=st.floats(0, 1),
+    q=st.integers(0, 64),
+    load=st.floats(0, 1),
+)
+
+
+@given(m=metric_st)
+def test_score_bounded(m):
+    s = FlowGuard().score(m)
+    assert 0.0 <= s <= 1.0 + 1e-9
+
+
+@given(ms=st.lists(metric_st, min_size=1, max_size=8))
+@settings(max_examples=200)
+def test_select_total(ms):
+    """FlowGuard always returns a healthy candidate, whatever the metrics."""
+    metrics = {i: m for i, m in enumerate(ms)}
+    best, _ = FlowGuard().select(metrics, now=100.0)
+    assert best in metrics
+
+
+@given(m=metric_st, dq=st.integers(1, 16))
+def test_score_monotone_in_queue(m, dq):
+    """Deeper queue never raises the score (Eq 1 sanity)."""
+    fg = FlowGuard()
+    import dataclasses
+
+    worse = dataclasses.replace(m, queue_depth=m.queue_depth + dq)
+    assert fg.score(worse) <= fg.score(m) + 1e-12
+
+
+@given(m=metric_st, dmem=st.floats(0.01, 1.0))
+def test_overload_monotone_in_memory(m, dmem):
+    import dataclasses
+
+    fg = FlowGuard()
+    worse = dataclasses.replace(
+        m, memory_utilization=min(m.memory_utilization + dmem, 1.0)
+    )
+    assert fg.overload_score(worse) >= fg.overload_score(m) - 1e-12

@@ -1,0 +1,209 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles over
+shape/dtype/masking sweeps (the per-kernel allclose deliverable)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, K, D, causal, window, dtype
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 96, 96, 4, 4, 32, True, None, jnp.float32),     # MHA, ragged seq
+    (2, 128, 128, 8, 2, 64, True, 32, jnp.float32),     # sliding window
+    (1, 64, 64, 2, 1, 128, False, None, jnp.float32),   # non-causal (encoder)
+    (1, 128, 256, 4, 2, 64, True, None, jnp.float32),   # Sq != Sk
+    (2, 128, 128, 4, 2, 64, True, None, jnp.bfloat16),  # bf16 inputs
+    (1, 80, 80, 4, 2, 64, True, None, jnp.float32),     # non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_naive(case):
+    B, Sq, Sk, H, K, D, causal, window, dtype = case
+    q = _rand((B, Sq, H, D), dtype)
+    k = _rand((B, Sk, K, D), dtype)
+    v = _rand((B, Sk, K, D), dtype)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, interpret=True,
+        block_q=64, block_k=64,
+    )
+    want = ref.attention_naive(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_flash_attention_chunked_ref_matches_naive():
+    """The chunked jnp reference (the CPU/dry-run execution path) is itself
+    validated against the dense oracle."""
+    q = _rand((2, 96, 4, 64))
+    k = _rand((2, 96, 2, 64))
+    v = _rand((2, 96, 2, 64))
+    for window in (None, 24):
+        got = ref.flash_attention(q, k, v, causal=True, window=window,
+                                  q_chunk=32, kv_chunk=32)
+        want = ref.attention_naive(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_q_offset():
+    """Continuation block: queries sit at the END of a longer KV."""
+    q = _rand((1, 32, 4, 64))
+    k = _rand((1, 128, 4, 64))
+    v = _rand((1, 128, 4, 64))
+    out = flash_attention_pallas(
+        q, k, v, causal=True, q_offset=96, interpret=True, block_q=32, block_k=32
+    )
+    want = ref.attention_naive(q, k, v, causal=True, q_offset=96)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    # B, T, S, H, K, D, window, ring, dtype
+    (2, 1, 128, 4, 2, 64, None, False, jnp.float32),
+    (2, 6, 128, 8, 2, 64, None, False, jnp.float32),     # speculative verify
+    (1, 3, 96, 4, 4, 32, None, False, jnp.float32),
+    (2, 4, 64, 8, 4, 64, 24, True, jnp.float32),          # SWA ring buffer
+    (1, 1, 256, 2, 1, 128, None, False, jnp.float32),
+    (2, 2, 128, 4, 2, 64, None, False, jnp.bfloat16),
+    (1, 21, 160, 4, 2, 64, None, False, jnp.float32),     # depth-20 verify
+]
+
+
+def _ring_positions(B, S, cache_len):
+    base = np.full((B, S), -1, np.int32)
+    for b in range(B):
+        L = int(cache_len[b])
+        for p in range(max(0, L - S), L):
+            base[b, p % S] = p
+    return jnp.asarray(base)
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_ref(case):
+    B, T, S, H, K, D, window, ring, dtype = case
+    q = _rand((B, T, H, D), dtype)
+    k = _rand((B, S, K, D), dtype)
+    v = _rand((B, S, K, D), dtype)
+    cache_len = jnp.asarray(RNG.integers(T, S, size=(B,)), jnp.int32)
+    kv_pos = _ring_positions(B, S, cache_len) if ring else None
+    out = decode_attention_pallas(
+        q, k, v, cache_len, kv_positions=kv_pos, window=window,
+        interpret=True, block_k=64,
+    )
+    want = ref.decode_attention(
+        q, k, v, cache_len, kv_positions=kv_pos, window=window
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_decode_attention_stale_slots_masked():
+    """Slots holding positions >= cache_len (rolled-back speculative writes)
+    must not contribute."""
+    B, T, S, H, K, D = 1, 1, 32, 2, 2, 32
+    q = _rand((B, T, H, D))
+    k = _rand((B, S, K, D))
+    v = _rand((B, S, K, D))
+    # cache_len = 16; poison slots 16.. with positions ABOVE the horizon
+    pos = np.arange(S, dtype=np.int32)
+    kv_pos = jnp.asarray(pos)[None]
+    out_clean = decode_attention_pallas(
+        q, k, v, jnp.asarray([16]), kv_positions=kv_pos, interpret=True, block_k=16
+    )
+    k2 = k.at[:, 16:].set(999.0)
+    v2 = v.at[:, 16:].set(-999.0)
+    out_poisoned = decode_attention_pallas(
+        q, k2, v2, jnp.asarray([16]), kv_positions=kv_pos, interpret=True, block_k=16
+    )
+    np.testing.assert_allclose(np.asarray(out_clean), np.asarray(out_poisoned), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba2)
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk, with_init
+    (2, 64, 8, 32, 1, 16, 32, False),
+    (1, 96, 4, 16, 1, 32, 32, True),      # ragged chunks + initial state
+    (2, 128, 8, 64, 2, 16, 64, True),     # multi-group
+    (1, 32, 2, 32, 1, 128, 16, False),
+    (1, 48, 16, 32, 4, 16, 16, True),     # hb < rep grouping
+]
+
+
+def _ssd_inputs(B, S, H, P, G, N):
+    x = _rand((B, S, H, P), scale=0.5)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 4.0, size=(H,)), jnp.float32)
+    Bm = _rand((B, S, G, N), scale=0.3)
+    C = _rand((B, S, G, N), scale=0.3)
+    return x, dt, A, Bm, C
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_naive(case):
+    B, S, H, P, G, N, chunk, with_init = case
+    x, dt, A, Bm, C = _ssd_inputs(B, S, H, P, G, N)
+    s0 = _rand((B, H, P, N), scale=0.2) if with_init else None
+    y, sf = ssd_scan_pallas(
+        x, dt, A, Bm, C, chunk=chunk, initial_state=s0, return_state=True,
+        interpret=True,
+    )
+    yw, sw = ref.ssd_scan_naive(x, dt, A, Bm, C, initial_state=s0, return_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sw), atol=1e-4)
+
+
+def test_ssd_chunked_ref_matches_naive():
+    """The chunked jnp reference (dry-run path) against the recurrence."""
+    x, dt, A, Bm, C = _ssd_inputs(2, 96, 4, 16, 1, 32)
+    y, s = ref.ssd_scan(x, dt, A, Bm, C, chunk=32, return_state=True)
+    yw, sw = ref.ssd_scan_naive(x, dt, A, Bm, C, return_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sw), atol=1e-4)
+
+
+def test_ssd_decode_step_matches_scan():
+    """Sequential single-token decode equals the full scan token-for-token."""
+    B, S, H, P, G, N = 1, 8, 4, 16, 1, 16
+    x, dt, A, Bm, C = _ssd_inputs(B, S, H, P, G, N)
+    y_full = ref.ssd_scan_naive(x, dt, A, Bm, C)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    rep = H // G
+    for t in range(S):
+        Bt = jnp.repeat(Bm[:, t], rep, axis=1)[:, :, :]  # (B,H,N) via group repeat
+        Ct = jnp.repeat(C[:, t], rep, axis=1)[:, :, :]
+        state, y_t = ref.ssd_decode_step(
+            state, x[:, t], dt[:, t], A, Bm[:, t], C[:, t]
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_t), np.asarray(y_full[:, t]), atol=1e-4
+        )

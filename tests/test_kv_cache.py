@@ -1,0 +1,111 @@
+"""Paged KV-cache / prefix-cache tests, incl. hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockPool, KVCacheManager, chain_hashes
+
+
+def test_alloc_release_roundtrip():
+    pool = BlockPool(8, block_size=4)
+    ids = [pool.allocate() for _ in range(8)]
+    assert pool.allocate() is None  # exhausted
+    for b in ids:
+        pool.release(b)
+    assert pool.used == 0
+
+
+def test_prefix_sharing_refcounts():
+    pool = BlockPool(8, block_size=4)
+    h = 12345
+    a = pool.allocate(h)
+    b = pool.allocate(h)
+    assert a == b and pool.blocks[a].ref_count == 2
+    pool.release(a)
+    assert pool.blocks[a].ref_count == 1
+    pool.release(b)
+    assert pool.used == 0 and h not in pool.hash_index
+
+
+def test_double_free_asserts():
+    pool = BlockPool(2)
+    b = pool.allocate()
+    pool.release(b)
+    with pytest.raises(AssertionError):
+        pool.release(b)
+
+
+def test_chain_hashes_prefix_property():
+    t1 = list(range(32))
+    t2 = list(range(16)) + [99] * 16
+    h1, h2 = chain_hashes(t1, 8), chain_hashes(t2, 8)
+    assert h1[:2] == h2[:2]      # shared 16-token prefix -> same first chain
+    assert h1[2:] != h2[2:]
+
+
+def test_manager_prefix_reuse_and_hit_rate():
+    kv = KVCacheManager(64, block_size=4)
+    prompt = list(range(16))
+    a1 = kv.allocate_sequence("r1", prompt, extra_tokens=0)
+    assert a1.shared_blocks == 0
+    a2 = kv.allocate_sequence("r2", prompt, extra_tokens=0)
+    assert a2.shared_blocks == 4          # full prefix reuse
+    assert kv.hit_rate > 0.5
+    kv.free_sequence("r1")
+    kv.free_sequence("r2")
+    assert kv.pool.used == 0
+
+
+def test_manager_oom_returns_none_and_rolls_back():
+    kv = KVCacheManager(4, block_size=4)
+    assert kv.allocate_sequence("r1", list(range(12)), extra_tokens=0) is not None
+    before = kv.pool.used
+    assert kv.allocate_sequence("r2", list(range(100, 116)), extra_tokens=0) is None
+    assert kv.pool.used == before          # failed alloc released everything
+
+
+def test_extend_sequence_grows():
+    kv = KVCacheManager(16, block_size=4)
+    kv.allocate_sequence("r", list(range(4)), extra_tokens=0)
+    assert len(kv.seqs["r"].block_ids) == 1
+    assert kv.extend_sequence("r", 9)
+    assert len(kv.seqs["r"].block_ids) == 4  # 13 tokens -> 4 blocks
+
+
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "free", "extend"]),
+            st.integers(0, 9),                     # request slot
+            st.integers(1, 40),                    # token count
+        ),
+        max_size=60,
+    )
+)
+@settings(max_examples=100)
+def test_manager_invariants_under_random_ops(ops):
+    """Refcount/pool invariants hold under arbitrary alloc/extend/free."""
+    kv = KVCacheManager(32, block_size=4)
+    live = {}
+    for op, slot, n in ops:
+        rid = f"r{slot}"
+        if op == "alloc" and rid not in live:
+            a = kv.allocate_sequence(rid, list(range(n)), extra_tokens=0)
+            if a is not None:
+                live[rid] = a
+        elif op == "free" and rid in live:
+            kv.free_sequence(rid)
+            del live[rid]
+        elif op == "extend" and rid in live:
+            kv.extend_sequence(rid, n)
+        # invariants
+        assert 0 <= kv.pool.used <= kv.pool.n_blocks
+        assert 0.0 <= kv.memory_utilization <= 1.0
+        for b in kv.pool.blocks:
+            assert b.ref_count >= 0
+        free_set = set(kv.pool.free)
+        for bid in free_set:
+            assert kv.pool.blocks[bid].ref_count == 0
+    for rid in list(live):
+        kv.free_sequence(rid)
+    assert kv.pool.used == 0

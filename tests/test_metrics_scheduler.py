@@ -1,0 +1,127 @@
+"""PerformanceMonitor (Eq 17-19) and StreamScheduler behaviour tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flowguard import FlowGuard
+from repro.core.metrics import PerformanceMonitor, RequestRecord
+from repro.core.scheduler import StreamScheduler
+from repro.serving.request import Request, SamplingParams
+
+
+def _rec(rid, t0, t1, lp, lg, times, wid=0):
+    return RequestRecord(request_id=rid, t_start=t0, t_end=t1, prompt_len=lp,
+                         generated=lg, token_times=times, worker_id=wid)
+
+
+def test_eq17_latency():
+    r = _rec("a", 1.0, 3.5, 10, 4, [1.5, 2.0, 2.5, 3.5])
+    assert r.latency == 2.5
+
+
+def test_eq18_tpot():
+    r = _rec("a", 0.0, 3.0, 10, 4, [1.0, 1.5, 2.0, 3.0])
+    # mean inter-token gap = (0.5 + 0.5 + 1.0) / 3
+    assert abs(r.tpot - 2.0 / 3) < 1e-9
+
+
+def test_eq19_throughput():
+    r = _rec("a", 0.0, 2.0, 10, 6, [0.5, 2.0])
+    assert r.throughput == (10 + 6) / 2.0
+
+
+def test_ttft():
+    r = _rec("a", 1.0, 5.0, 10, 2, [1.8, 5.0])
+    assert abs(r.ttft - 0.8) < 1e-9
+
+
+def test_monitor_percentiles_and_aggregate():
+    now = [0.0]
+    mon = PerformanceMonitor(1, clock=lambda: now[0])
+    for i in range(100):
+        mon.complete_request(_rec(f"r{i}", 0.0, (i + 1) / 100.0, 10, 5,
+                                  [0.001, (i + 1) / 100.0]))
+    s = mon.summary()
+    assert s["n"] == 100
+    assert abs(s["latency_p50"] - 0.51) < 0.02
+    assert s["latency_p99"] >= 0.99
+    assert s["aggregate_tput"] == pytest.approx(100 * 15 / 1.0)
+
+
+def test_monitor_throughput_window():
+    now = [0.0]
+    mon = PerformanceMonitor(1, clock=lambda: now[0])
+    for t in range(10):
+        now[0] = t * 0.1
+        mon.record_tokens(0, 50, now[0])
+    assert mon.workers[0].recent_throughput > 100
+
+
+def test_monitor_collection_cadence():
+    """Paper: 500 ms metric collection interval."""
+    now = [0.0]
+    mon = PerformanceMonitor(1, clock=lambda: now[0])
+    assert not mon.due_for_collection(0.2)
+    assert mon.due_for_collection(0.6)
+    assert not mon.due_for_collection(0.8)
+    assert mon.due_for_collection(1.2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def _req(n=8):
+    return Request(prompt=list(range(n)), params=SamplingParams(max_new_tokens=4))
+
+
+def test_scheduler_routes_and_queues():
+    s = StreamScheduler(2, FlowGuard())
+    w = s.submit(_req(), now=0.0)
+    assert w in (0, 1)
+    assert s.pending_total() == 1
+    r = s.next_for_prefill(w)
+    assert r is not None and s.pending_total() == 0
+
+
+def test_scheduler_rebalances_on_failure():
+    s = StreamScheduler(2, FlowGuard())
+    for _ in range(6):
+        s.submit(_req(), now=0.0)
+    q0 = s.queue_depth(0)
+    moved = s.mark_unhealthy(0, now=0.0)
+    assert moved == q0
+    assert s.queue_depth(0) == 0
+    assert s.queue_depth(1) == 6
+    # recovered worker rejoins routing
+    s.mark_healthy(0)
+    picks = {s.submit(_req(), now=1.0) for _ in range(8)}
+    assert 0 in picks
+
+
+def test_scheduler_all_dead_raises():
+    s = StreamScheduler(1, FlowGuard())
+    s.mark_unhealthy(0, now=0.0)
+    with pytest.raises(RuntimeError):
+        s.submit(_req(), now=0.0)
+
+
+@given(
+    sizes=st.lists(st.integers(4, 64), min_size=1, max_size=40),
+    n_pairs=st.integers(1, 4),
+)
+@settings(max_examples=60, deadline=None)
+def test_scheduler_conserves_requests(sizes, n_pairs):
+    """No request is lost or duplicated by routing, whatever the trace."""
+    s = StreamScheduler(n_pairs, FlowGuard())
+    reqs = [_req(n) for n in sizes]
+    for r in reqs:
+        s.submit(r, now=0.0)
+    drained = []
+    for w in range(n_pairs):
+        while True:
+            r = s.next_for_prefill(w)
+            if r is None:
+                break
+            drained.append(r.request_id)
+    assert sorted(drained) == sorted(r.request_id for r in reqs)

@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step + prefill/decode on CPU, asserting
+output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config, reduced_config
+from repro.distributed.sharding import unzip_params
+from repro.models import build_model
+
+
+def _batch(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    }
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1,
+            jnp.dtype(cfg.dtype),
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, 8, cfg.d_model)) * 0.1, jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+
+    # --- train step: loss is finite and differentiable -----------------------
+    loss, metrics = model.loss_fn(params, batch)
+    assert jnp.isfinite(loss), arch
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+    # --- forward shapes ------------------------------------------------------
+    logits = model.forward(params, batch)
+    S_text = batch["tokens"].shape[1]
+    assert logits.shape == (B, S_text, cfg.padded_vocab), arch
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    # padded vocab columns masked to the dtype min
+    if cfg.padded_vocab > cfg.vocab_size:
+        pad_cols = logits[..., cfg.vocab_size:]
+        assert float(pad_cols.max()) <= jnp.finfo(logits.dtype).min / 2
+
+    # --- prefill + decode (serve path) --------------------------------------
+    last, cache = model.prefill(params, batch, max_len=64)
+    assert last.shape == (B, cfg.padded_vocab)
+    toks = jnp.zeros((B, 3), jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, toks)
+    assert logits2.shape == (B, 3, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+    np.testing.assert_array_equal(np.asarray(cache2["len"]), np.asarray(cache["len"]) + 3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-2.7b", "jamba-1.5-large-398b"])
+def test_decode_matches_forward(arch):
+    """Incremental decode must reproduce the full-forward logits (the KV/SSM
+    cache correctness test)."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(1)))
+    B, S, T = 1, 12, 4
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + T)), jnp.int32)
+
+    full_logits = model.forward(params, {"tokens": toks})  # (B, S+T, V)
+
+    _, cache = model.prefill(params, {"tokens": toks[:, :S]}, max_len=64)
+    dec_logits, _ = model.decode_step(params, cache, toks[:, S:])
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits[:, S:], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "jamba-1.5-large-398b"])
+def test_ssm_rollback_commit(arch):
+    """Speculative rollback: decode T tokens, commit at accept_idx, then the
+    next decode must equal a run that never saw the rejected tokens."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(2)))
+    B, S = 1, 8
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    good = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 2)), jnp.int32)
+    junk = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 2)), jnp.int32)
+    probe = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+
+    # path A: ingest [good, junk] (T=4), commit only the 2 good tokens
+    _, cache = model.prefill(params, {"tokens": prompt}, max_len=64)
+    old_len = cache["len"]
+    _, cache = model.decode_step(params, cache, jnp.concatenate([good, junk], 1))
+    cache = model.commit_cache(cache, old_len, jnp.full((B,), 1, jnp.int32))
+    la, _ = model.decode_step(params, cache, probe)
+
+    # path B: ingest only good
+    _, cache_b = model.prefill(params, {"tokens": prompt}, max_len=64)
+    _, cache_b = model.decode_step(params, cache_b, good)
+    lb, _ = model.decode_step(params, cache_b, probe)
+
+    np.testing.assert_allclose(
+        np.asarray(la, np.float32), np.asarray(lb, np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_sliding_window_ring_buffer():
+    """SWA arch decodes correctly past the window boundary."""
+    cfg = reduced_config("h2o-danube-3-4b")  # window=16 in reduced form
+    assert cfg.sliding_window == 16
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    B, S = 1, 12
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 10)), jnp.int32)
+    full = model.forward(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :S]}, max_len=S + 16)
+    errs = []
+    cur = cache
+    for t in range(10):
+        lg, cur = model.decode_step(params, cur, toks[:, S + t : S + t + 1])
+        errs.append(
+            float(
+                jnp.abs(
+                    lg[:, 0].astype(jnp.float32) - full[:, S + t].astype(jnp.float32)
+                ).max()
+            )
+        )
+    assert max(errs) < 5e-2, errs
+
+
+def test_param_count_analytics():
+    """Analytic n_params within 2% of actual initialised leaves (real heads,
+    unpadded vocab are the analytic basis)."""
+    for arch in ("qwen3-1.7b", "mixtral-8x7b"):
+        cfg = get_config(arch)
+        want = cfg.n_params()
+        # full config is too big to init; reduced config checks the formula
+        red = reduced_config(arch)
+        model = build_model(red)
+        params, _ = unzip_params(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = red.n_params()
+        pad_overhead = (red.padded_vocab - red.vocab_size) * red.d_model * 2
+        assert abs(actual - analytic) <= 0.05 * analytic + pad_overhead + 1000, (
+            arch, actual, analytic,
+        )
+    assert get_config("mixtral-8x7b").n_active_params() < get_config("mixtral-8x7b").n_params()

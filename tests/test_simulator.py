@@ -1,0 +1,137 @@
+"""Discrete-event simulator behaviour tests — the paper's qualitative claims
+as executable assertions."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.workloads import sample_mixed, sample_requests
+from repro.serving.simulator import (
+    ServeSimulator,
+    SimConfig,
+    streamserve_config,
+    vllm_dp_config,
+    vllm_tp_config,
+)
+
+CFG = get_config("llama2-7b")
+
+
+def _run(conf, wl="gsm8k", n=40, rate=10.0, seed=0):
+    reqs = sample_requests(wl, n, seed=seed, arrival_rate=rate)
+    sim = ServeSimulator(CFG, copy.deepcopy(conf))
+    return sim.run(reqs), sim
+
+
+def test_all_requests_complete():
+    for conf in (streamserve_config(), vllm_tp_config(), vllm_dp_config()):
+        s, _ = _run(conf)
+        assert s["n"] == 40
+
+
+def test_streamserve_beats_baselines_on_latency():
+    """The paper's headline: disaggregation + adaptive speculation gives a
+    large latency reduction vs both vLLM deployments."""
+    ss, _ = _run(streamserve_config())
+    tp, _ = _run(vllm_tp_config())
+    dp, _ = _run(vllm_dp_config())
+    assert ss["latency_mean"] < tp["latency_mean"] / 2
+    assert ss["latency_mean"] < dp["latency_mean"] / 2
+    assert ss["latency_p99"] < tp["latency_p99"]
+
+
+def test_tpot_stays_same_order():
+    """TPOT stability claim: spec + disaggregation must not degrade
+    per-token time (paper §4.8)."""
+    ss, _ = _run(streamserve_config())
+    tp, _ = _run(vllm_tp_config())
+    assert ss["tpot_mean"] < 3 * tp["tpot_mean"]
+
+
+def test_speculation_improves_throughput():
+    on, _ = _run(streamserve_config())
+    off, _ = _run(streamserve_config(speculative=False))
+    assert on["throughput_mean"] > off["throughput_mean"]
+    assert on["latency_mean"] < off["latency_mean"]
+
+
+def test_fixed_depth_non_monotonic_ordering():
+    """Table 9 shape: no-spec << spec; moderate depth >= extreme depth."""
+    res = {}
+    for d in (0, 3, 5, 20):
+        conf = vllm_tp_config(speculative=d > 0, fixed_depth=d)
+        res[d], _ = _run(conf, wl="gsm8k")
+    assert res[3]["throughput_mean"] > 1.5 * res[0]["throughput_mean"]
+    assert res[5]["throughput_mean"] > res[20]["throughput_mean"]
+
+
+def test_monolithic_worse_under_prefill_pressure():
+    """Disaggregation claim: long-prompt traffic degrades the monolithic
+    engine (prefill blocks decode), not the disaggregated one."""
+    ss, _ = _run(streamserve_config(), wl="sum", rate=20.0)
+    mono = SimConfig(mode="monolithic", n_workers=2, lane_chips=2,
+                     router="flowguard", speculative=True, adaptive=True,
+                     max_batch=32)
+    mn, _ = _run(mono, wl="sum", rate=20.0)
+    assert ss["latency_mean"] < mn["latency_mean"]
+
+
+def test_overloaded_worker_excluded():
+    """FlowGuard overload detection: a worker with a deep queue stops
+    receiving requests until it drains."""
+    conf = streamserve_config()
+    reqs = sample_mixed(10, seed=0, arrival_rate=100.0)  # heavy burst
+    sim = ServeSimulator(CFG, conf)
+    sim.run(reqs)
+    by_w = {}
+    for r in sim.monitor.completed:
+        by_w[r.worker_id] = by_w.get(r.worker_id, 0) + 1
+    assert len(by_w) == 2  # nobody starved / herded entirely
+
+
+def test_failure_reroutes_all_requests():
+    conf = streamserve_config()
+    reqs = sample_requests("gsm8k", 30, seed=1, arrival_rate=20.0)
+    sim = ServeSimulator(CFG, conf)
+    sim.inject_failure(0.4, wid=1)
+    s = sim.run(reqs)
+    assert s["n"] == 30
+    assert all(r.worker_id == 0 for r in sim.monitor.completed if r.t_end > 0.4)
+
+
+def test_elastic_scale_up_adds_capacity():
+    conf = streamserve_config()
+    reqs = sample_requests("gsm8k", 40, seed=2, arrival_rate=50.0)
+    sim = ServeSimulator(CFG, conf)
+    wid = sim.add_worker()
+    assert wid == 2
+    s = sim.run(reqs)
+    assert s["n"] == 40
+    served = {r.worker_id for r in sim.monitor.completed}
+    assert 2 in served  # the new pair took real traffic
+
+
+def test_nixl_ablation_adds_transfer_latency():
+    fast, _ = _run(streamserve_config(), wl="sum")
+    slow, _ = _run(streamserve_config(nixl=False), wl="sum")
+    assert slow["ttft_mean"] >= fast["ttft_mean"]
+
+
+def test_concurrency_latency_flat_for_streamserve():
+    """Fig 4 claim: StreamServe latency grows sub-linearly with concurrency
+    while baselines degrade sharply."""
+    def p50_at(conf, n):
+        reqs = sample_requests("gsm8k", n, seed=3)
+        sim = ServeSimulator(CFG, copy.deepcopy(conf))
+        return sim.run(reqs)["latency_p50"]
+
+    ss_lo, ss_hi = p50_at(streamserve_config(), 8), p50_at(streamserve_config(), 80)
+    tp_lo, tp_hi = p50_at(vllm_tp_config(), 8), p50_at(vllm_tp_config(), 80)
+    assert ss_hi / ss_lo < tp_hi / tp_lo
+
+
+def test_deterministic_given_seed():
+    a, _ = _run(streamserve_config(), seed=5)
+    b, _ = _run(streamserve_config(), seed=5)
+    assert a == b

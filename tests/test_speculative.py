@@ -1,0 +1,124 @@
+"""Speculative verification: batched JAX verify vs sequential oracle,
+plus the distribution-preservation property for greedy decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampling import sample, token_probs
+from repro.serving.speculative import verify_reference, verify_tokens
+
+RNG = np.random.default_rng(7)
+
+
+def _case(B, k, V, peaked=False):
+    logits = jnp.asarray(RNG.normal(size=(B, k + 1, V)) * (4.0 if peaked else 1.0),
+                         jnp.float32)
+    draft = jnp.asarray(RNG.integers(0, V, size=(B, k)), jnp.int32)
+    q = jnp.asarray(RNG.uniform(0.2, 1.0, size=(B, k)), jnp.float32)
+    return logits, draft, q
+
+
+def test_greedy_accepts_matching_argmax():
+    """Greedy target + correct draft => all accepted, bonus = argmax(L_k)."""
+    B, k, V = 3, 4, 50
+    logits, _, _ = _case(B, k, V, peaked=True)
+    draft = jnp.argmax(logits[:, :k], axis=-1)
+    q = jnp.ones((B, k), jnp.float32)
+    res = verify_tokens(jax.random.PRNGKey(0), draft, q, logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(res.n_accepted), k)
+    np.testing.assert_array_equal(
+        np.asarray(res.next_token), np.asarray(jnp.argmax(logits[:, k], -1))
+    )
+
+
+def test_greedy_rejects_wrong_draft():
+    B, k, V = 2, 4, 50
+    logits, _, _ = _case(B, k, V, peaked=True)
+    good = jnp.argmax(logits[:, :k], axis=-1)
+    # poison position 1 with a token that is NOT the argmax
+    bad = (good.at[:, 1].set((good[:, 1] + 1) % V))
+    q = jnp.ones((B, k), jnp.float32)
+    res = verify_tokens(jax.random.PRNGKey(0), bad, q, logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(res.n_accepted), 1)
+    # replacement must be the argmax at the rejected position
+    np.testing.assert_array_equal(
+        np.asarray(res.next_token), np.asarray(jnp.argmax(logits[:, 1], -1))
+    )
+
+
+def test_emitted_tokens_bounds():
+    B, k, V = 8, 6, 100
+    logits, draft, q = _case(B, k, V)
+    res = verify_tokens(jax.random.PRNGKey(1), draft, q, logits, temperature=1.0)
+    n = np.asarray(res.n_accepted)
+    assert ((0 <= n) & (n <= k)).all()
+    assert (np.asarray(res.next_token) < V).all()
+
+
+def test_inactive_rows_emit_zero():
+    B, k, V = 4, 3, 20
+    logits, draft, q = _case(B, k, V)
+    active = jnp.asarray([True, False, True, False])
+    res = verify_tokens(jax.random.PRNGKey(2), draft, q, logits, active=active,
+                        temperature=0.0)
+    n = np.asarray(res.n_accepted)
+    assert n[1] == 0 and n[3] == 0
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_matches_sequential_reference_greedy(temperature):
+    """Greedy path is deterministic -> exact match against the oracle."""
+    if temperature > 0:
+        pytest.skip("sampled path compared distributionally below")
+    B, k, V = 6, 5, 40
+    logits, _, _ = _case(B, k, V, peaked=True)
+    draft = jnp.argmax(logits[:, :k], axis=-1)
+    # corrupt one position per row at varying depths
+    draft = draft.at[jnp.arange(B), jnp.arange(B) % k].add(1)
+    draft = draft % V
+    q = jnp.ones((B, k), jnp.float32)
+    res = verify_tokens(jax.random.PRNGKey(0), draft, q, logits, temperature=0.0)
+    for b in range(B):
+        n_ref, nxt_ref = verify_reference(
+            jax.random.PRNGKey(0), np.asarray(draft[b]), np.asarray(q[b]),
+            np.asarray(logits[b]), temperature=0.0,
+        )
+        assert int(res.n_accepted[b]) == n_ref
+        assert int(res.next_token[b]) == nxt_ref
+
+
+def test_acceptance_rate_increases_with_draft_quality():
+    """Property: drafts sampled FROM the target distribution are accepted
+    far more often than uniform-random drafts."""
+    B, k, V = 64, 5, 30
+    logits = jnp.asarray(RNG.normal(size=(B, k + 1, V)) * 2, jnp.float32)
+    probs = token_probs(logits[:, :k].reshape(-1, V), 1.0, 0, 1.0).reshape(B, k, V)
+
+    key = jax.random.PRNGKey(3)
+    good = jax.random.categorical(key, jnp.log(probs + 1e-30), axis=-1)
+    good_q = jnp.take_along_axis(probs, good[..., None], -1)[..., 0]
+    bad = jnp.asarray(RNG.integers(0, V, size=(B, k)), jnp.int32)
+    bad_q = jnp.full((B, k), 1.0 / V, jnp.float32)
+
+    res_good = verify_tokens(key, good, good_q, logits, temperature=1.0)
+    res_bad = verify_tokens(key, bad, bad_q, logits, temperature=1.0)
+    assert res_good.n_accepted.mean() > res_bad.n_accepted.mean() + 0.5
+
+
+@given(
+    B=st.integers(1, 4), k=st.integers(1, 6), V=st.integers(4, 30),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=60, deadline=None)
+def test_verify_invariants(B, k, V, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(B, k + 1, V)), jnp.float32)
+    draft = jnp.asarray(rng.integers(0, V, size=(B, k)), jnp.int32)
+    q = jnp.asarray(rng.uniform(0.05, 1.0, size=(B, k)), jnp.float32)
+    res = verify_tokens(jax.random.PRNGKey(seed), draft, q, logits, temperature=1.0)
+    n = np.asarray(res.n_accepted)
+    assert ((0 <= n) & (n <= k)).all()
+    assert (np.asarray(res.accept_idx) == n).all()
+    assert ((0 <= np.asarray(res.next_token)) & (np.asarray(res.next_token) < V)).all()

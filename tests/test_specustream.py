@@ -1,0 +1,137 @@
+"""SpecuStream unit + hypothesis property tests (paper Eq 8-16, Alg 4)."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.specustream import (
+    DEPTH_BUCKETS,
+    FixedSpeculation,
+    SpecuStream,
+    SpecuStreamConfig,
+    snap_to_bucket,
+)
+
+
+def test_eq12_formula_first_step():
+    ss = SpecuStream()
+    a, load, tput = 0.8, 0.5, 200.0
+    d = ss.adapt(a, load, tput)
+    # first step: flow was all zeros -> delta = a; mag = a / h
+    mag = a / 10
+    scale = max(1.0, 400.0 / 200.0)
+    adj = 1.0 - 0.5
+    want = 5.0 + (a * mag * 5.0) * adj * scale
+    assert math.isclose(d.depth, min(max(want, 2.0), 20.0), rel_tol=1e-9)
+
+
+def test_depth_clipped_to_range():
+    ss = SpecuStream()
+    for _ in range(50):
+        d = ss.adapt(1.0, 0.0, 1.0)  # max acceptance, idle, tiny throughput
+    assert 2 <= d.depth <= 20
+    assert d.bucket_depth in DEPTH_BUCKETS
+
+
+def test_load_reduces_depth():
+    """Eq 11: under load, depth shrinks toward d_base."""
+    lo, hi = SpecuStream(), SpecuStream()
+    for _ in range(20):
+        d_lo = lo.adapt(0.9, 0.05, 100.0)
+        d_hi = hi.adapt(0.9, 0.95, 100.0)
+    assert d_hi.depth <= d_lo.depth
+
+
+def test_throughput_deficit_deepens():
+    """Eq 10: below-target throughput scales depth up."""
+    slow, fast = SpecuStream(), SpecuStream()
+    for _ in range(20):
+        d_slow = slow.adapt(0.9, 0.1, 50.0)    # far below 400 target
+        d_fast = fast.adapt(0.9, 0.1, 1000.0)  # above target
+    assert d_slow.depth >= d_fast.depth
+
+
+def test_micro_batch_eq14():
+    ss = SpecuStream()
+    d = ss.adapt(0.7, 0.3, 300.0)
+    assert d.micro_batch == max(1, int(16 * 5 / d.depth))
+
+
+def test_ema_eq16():
+    cfg = SpecuStreamConfig()
+    ss = SpecuStream(cfg)
+    tau0 = ss.tau_recent
+    d = ss.adapt(0.5, 0.2, 100.0)
+    want = 0.9 * tau0 + 0.1 * d.projected_throughput
+    assert math.isclose(ss.tau_recent, want, rel_tol=1e-9)
+
+
+def test_flow_vector_circular():
+    ss = SpecuStream(SpecuStreamConfig(history=4))
+    for i in range(6):
+        ss.adapt(0.1 * i, 0.0, 400.0)
+    assert ss.idx == 6 % 4
+    assert len(ss.flow) == 4
+
+
+def test_snap_to_bucket():
+    assert snap_to_bucket(5.0) == 5
+    assert snap_to_bucket(7.9) == 6
+    assert snap_to_bucket(1.0) == 2      # floor at smallest bucket
+    assert snap_to_bucket(25.0) == 20
+    for b in DEPTH_BUCKETS:
+        assert snap_to_bucket(float(b)) == b
+
+
+def test_fixed_speculation_is_constant():
+    fs = FixedSpeculation(5)
+    ds = [fs.adapt(a / 10, 0.5, 100.0).bucket_depth for a in range(10)]
+    assert set(ds) == {5}
+    assert FixedSpeculation(0).adapt(0.9, 0.0, 1.0).bucket_depth == 0
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seq=st.lists(
+        st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 5000)),
+        min_size=1, max_size=60,
+    )
+)
+@settings(max_examples=150)
+def test_depth_always_valid(seq):
+    """Whatever the signal trajectory: depth in [d_min, d_max], bucket legal,
+    micro-batch >= 1, EMA finite."""
+    ss = SpecuStream()
+    for a, l, t in seq:
+        d = ss.adapt(a, l, t)
+        assert 2.0 <= d.depth <= 20.0
+        assert d.bucket_depth in DEPTH_BUCKETS
+        assert d.bucket_depth <= d.depth or d.depth < DEPTH_BUCKETS[0]
+        assert d.micro_batch >= 1
+        assert math.isfinite(ss.tau_recent) and ss.tau_recent >= 0
+
+
+@given(a=st.floats(0, 1), l=st.floats(0, 1), t=st.floats(0, 5000))
+def test_stateless_parts_deterministic(a, l, t):
+    s1, s2 = SpecuStream(), SpecuStream()
+    d1, d2 = s1.adapt(a, l, t), s2.adapt(a, l, t)
+    assert d1 == d2
+
+
+@given(data=st.data())
+@settings(max_examples=100)
+def test_constant_acceptance_fixed_point(data):
+    """Analytic fixed point of Eq 8/9/12 under constant acceptance ``a``:
+    every flow entry converges to delta* = a - delta*  =>  delta* = a/2,
+    so M_f -> a/2 and depth -> d_base + a^2 * gamma / 2 (idle, on-target).
+    Deeper steady-state speculation for higher-acceptance workloads — the
+    paper's §4.5 narrative, derived from its own equations."""
+    a = data.draw(st.floats(0.1, 0.9))
+    ss = SpecuStream()
+    for _ in range(300):
+        d = ss.adapt(a, 0.0, 1000.0)  # above target -> scale = 1, idle -> adj = 1
+    want = min(max(5.0 + a * (a / 2) * 5.0, 2.0), 20.0)
+    assert abs(d.depth - want) < 0.25, (a, d.depth, want)

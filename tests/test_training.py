@@ -1,0 +1,176 @@
+"""Optimizers, train step, data pipeline, sampling tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import reduced_config
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.workloads import TokenStream, sample_requests, WORKLOADS
+from repro.distributed.sharding import unzip_params
+from repro.models import build_model
+from repro.serving.sampling import apply_top_k, apply_top_p, sample, token_probs
+from repro.training.optimizer import (
+    OptConfig,
+    adafloor,
+    adamw,
+    clip_by_global_norm,
+    lr_schedule,
+)
+from repro.training.train_loop import make_train_step
+
+
+def test_adamw_reduces_quadratic_loss():
+    init, update = adamw(OptConfig(learning_rate=0.1, warmup_steps=0,
+                                   total_steps=1000, weight_decay=0.0))
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        updates, state, _ = update(grads, state, params)
+        params = {"w": params["w"] + updates["w"]}
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_adafloor_reduces_quadratic_loss():
+    init, update = adafloor(OptConfig(learning_rate=0.1, warmup_steps=0,
+                                      total_steps=1000, weight_decay=0.0))
+    params = {"w": jnp.ones((4, 4)) * 3.0}
+    state = init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        updates, state, _ = update(grads, state, params)
+        params = {"w": params["w"] + updates["w"]}
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adafloor_state_is_factored():
+    init, _ = adafloor(OptConfig())
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((4,))}
+    st_ = init(params)
+    assert st_.vr["big"].shape == (256,)
+    assert st_.vc["big"].shape == (512,)
+    assert st_.vr["small"].shape == (4,)
+    # memory: factored state is ~ (m+n) vs m*n
+    assert st_.vr["big"].size + st_.vc["big"].size < 0.01 * params["big"].size
+
+
+def test_grad_clipping():
+    grads = {"w": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 100
+    assert abs(float(jnp.linalg.norm(clipped["w"])) - 1.0) < 1e-5
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1e-3) < 1e-9           # end of warmup = peak
+    assert lrs[-1] < lrs[1]                     # decays
+    assert lrs[-1] >= 1e-4 - 1e-9               # floor = min_lr_frac * lr
+
+
+def test_train_step_loss_decreases():
+    cfg = reduced_config("qwen3-1.7b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    init_opt, step_fn = make_train_step(
+        model, OptConfig(learning_rate=3e-3, warmup_steps=2, total_steps=30)
+    )
+    opt = init_opt(params)
+    step_fn = jax.jit(step_fn)
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=0)
+    losses = []
+    for i in range(60):
+        stream.step = i
+        batch = {"tokens": jnp.asarray(next(stream))}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, (losses[0], losses[-1])
+
+
+def test_token_stream_deterministic_and_checkpointable():
+    s1 = TokenStream(1000, 16, 2, seed=3)
+    a = [next(s1) for _ in range(5)]
+    s2 = TokenStream(1000, 16, 2, seed=3)
+    s2.load_state_dict({"step": 3})
+    np.testing.assert_array_equal(s2.__next__(), a[3])
+    np.testing.assert_array_equal(s2.__next__(), a[4])
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    text = "StreamServe: adaptive speculative flows! 你好"
+    ids = tok.encode(text, bos=True, eos=True)
+    assert ids[0] == tok.BOS and ids[-1] == tok.EOS
+    assert tok.decode(ids) == text
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_sample_is_argmax():
+    logits = jnp.asarray([[1.0, 3.0, 2.0], [0.0, -1.0, 5.0]])
+    out = sample(jax.random.PRNGKey(0), logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(out), [1, 2])
+
+
+def test_top_k_masks_all_but_k():
+    logits = jnp.asarray([[1.0, 5.0, 3.0, 2.0]])
+    masked = apply_top_k(logits, 2)
+    assert bool(jnp.isneginf(masked[0, 0])) and bool(jnp.isneginf(masked[0, 3]))
+    assert float(masked[0, 1]) == 5.0
+
+
+def test_top_p_keeps_minimal_nucleus():
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    masked = apply_top_p(logits, 0.75)
+    assert not bool(jnp.isneginf(masked[0, 0]))
+    assert not bool(jnp.isneginf(masked[0, 1]))
+    assert bool(jnp.isneginf(masked[0, 3]))
+
+
+@given(seed=st.integers(0, 1000), temp=st.floats(0.2, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_token_probs_is_distribution(seed, temp):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(3, 32)), jnp.float32)
+    p = token_probs(logits, temp, 0, 1.0)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), 1.0, atol=1e-5)
+    assert (np.asarray(p) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+
+def test_workload_profiles_complete():
+    assert set(WORKLOADS) == {"alpaca", "gsm8k", "humaneval", "sum"}
+    for name in WORKLOADS:
+        reqs = sample_requests(name, 10, seed=0)
+        assert len(reqs) == 10
+        for r in reqs:
+            assert r.request.prompt_len >= 8
+            assert r.request.params.max_new_tokens >= 8
+
+
+def test_workload_deterministic():
+    a = sample_requests("gsm8k", 5, seed=1)
+    b = sample_requests("gsm8k", 5, seed=1)
+    assert [list(x.request.prompt) for x in a] == [list(x.request.prompt) for x in b]
+
+
+def test_acceptance_process_bounded():
+    reqs = sample_requests("humaneval", 5, seed=2)
+    rng = np.random.default_rng(0)
+    for r in reqs:
+        for _ in range(50):
+            a = r.acceptance.step(rng)
+            assert 0.05 <= a <= 0.98
