@@ -15,7 +15,6 @@ as JSON and rendered as markdown for EXPERIMENTS.md.
 from __future__ import annotations
 
 import copy
-import dataclasses
 import json
 import pathlib
 from typing import Callable, Dict, List, Optional, Tuple

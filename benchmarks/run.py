@@ -1,8 +1,10 @@
-"""Benchmark entrypoint: one benchmark per paper table/figure + roofline.
+"""Benchmark entrypoint: one benchmark per paper table/figure + roofline,
+plus a live-serving smoke benchmark through the public StreamServe API.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --tables   # paper tables only
   PYTHONPATH=src python -m benchmarks.run --roofline # roofline only
+  PYTHONPATH=src python -m benchmarks.run --serve    # live API serving only
 
 Outputs land in experiments/benchmarks/ and experiments/roofline.{json,md};
 EXPERIMENTS.md §Paper-tables / §Roofline summarise them.
@@ -14,14 +16,54 @@ import sys
 import time
 
 
+def serve_smoke() -> dict:
+    """Online serving through ServeConfig + StreamServe on the real engine:
+    a burst of shared-prefix requests, one mid-run arrival, one cancel."""
+    import numpy as np
+
+    from repro.api import ServeConfig, StreamServe
+
+    cfg = ServeConfig.reduced_smoke("qwen3-1.7b")
+    serve = StreamServe(cfg)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, serve.arch.vocab_size, 8).tolist()
+    t0 = time.time()
+    handles = [
+        serve.submit(shared + rng.integers(0, serve.arch.vocab_size, 8).tolist())
+        for _ in range(8)
+    ]
+    for _ in range(3):
+        serve.step()
+    late = serve.submit(shared + rng.integers(0, serve.arch.vocab_size, 8).tolist())
+    handles[-1].cancel()
+    for h in handles[:-1] + [late]:
+        h.result()
+    wall = time.time() - t0
+    s = serve.summary()
+    print(f"  {int(s['n'])} requests (1 mid-run, 1 cancelled) in {wall:.1f}s wall")
+    print(f"  logical latency mean={s['latency_mean']:.1f} ticks  "
+          f"ttft p50={s['ttft_p50']:.1f}  aggregate {s['aggregate_tput']:.1f} tok/tick")
+    for w in serve.worker_stats():
+        print(f"  pair {w['worker_id']}: acceptance={w['acceptance']:.2f} "
+              f"cache_hit={w['cache_hit_rate']:.2f} spec_depth={w['spec_depth']}")
+    return s
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", action="store_true")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--serve", action="store_true")
     args = ap.parse_args(argv)
-    run_all = not (args.tables or args.roofline)
+    run_all = not (args.tables or args.roofline or args.serve)
 
     t0 = time.time()
+    if run_all or args.serve:
+        print("=" * 70)
+        print("LIVE SERVING SMOKE (StreamServe API, real JAX engine)")
+        print("=" * 70)
+        serve_smoke()
+
     if run_all or args.roofline:
         print("=" * 70)
         print("ROOFLINE (from dry-run artifacts)")

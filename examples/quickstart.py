@@ -1,32 +1,30 @@
 """Quickstart: train a tiny model, then serve it through the full
 StreamServe stack (FlowGuard routing + SpecuStream adaptive speculation +
-disaggregated stream pairs) — all on CPU in a couple of minutes.
+disaggregated stream pairs) via the public API — all on CPU in minutes.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import reduced_config
-from repro.core import EngineConfig, PipeServeEngine
+from repro.api import ServeConfig, StreamServe
 from repro.data.workloads import TokenStream
 from repro.distributed.sharding import unzip_params
 from repro.models import build_model
-from repro.serving.request import Request, SamplingParams
 from repro.training.optimizer import OptConfig
 from repro.training.train_loop import make_train_step
 
 
 def main():
-    # ---- 1. build a reduced qwen3-family model -----------------------------
-    cfg = dataclasses.replace(reduced_config("qwen3-1.7b"), n_layers=2)
-    model = build_model(cfg)
+    # ---- 1. one config for the whole stack ---------------------------------
+    cfg = ServeConfig.reduced_smoke("qwen3-1.7b")
+    arch = cfg.build_arch_config()
+    model = build_model(arch)
     params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
-    print(f"model: {cfg.name} (reduced) — {cfg.n_params()/1e6:.2f}M params")
+    print(f"model: {arch.name} (reduced) — {arch.n_params()/1e6:.2f}M params")
 
     # ---- 2. train it briefly ------------------------------------------------
     init_opt, train_step = make_train_step(
@@ -34,7 +32,7 @@ def main():
     )
     opt = init_opt(params)
     train_step = jax.jit(train_step)
-    stream = TokenStream(cfg.vocab_size, 32, 8, seed=0)
+    stream = TokenStream(arch.vocab_size, 32, 8, seed=0)
     t0 = time.time()
     first = last = None
     for step in range(80):
@@ -48,32 +46,32 @@ def main():
     print(f"trained 80 steps in {time.time()-t0:.1f}s: loss {first:.3f} -> {last:.3f}")
     assert last < first, "training must reduce loss"
 
-    # ---- 3. serve it through StreamServe ------------------------------------
-    eng = PipeServeEngine(
-        cfg, params, n_pairs=2,
-        econf=EngineConfig(max_batch=3, max_len=96, draft="ngram"),
-    )
+    # ---- 3. serve the trained params through the StreamServe API -----------
+    serve = StreamServe(cfg, params=params)
     rng = np.random.default_rng(0)
-    shared = rng.integers(0, cfg.vocab_size, 8).tolist()  # common prefix
-    reqs = []
-    for _ in range(6):
-        body = rng.integers(0, cfg.vocab_size, 8).tolist()
-        r = Request(prompt=shared + body, params=SamplingParams(max_new_tokens=12))
-        reqs.append(r)
-        eng.submit(r)
-    eng.run_until_done(max_steps=500)
+    shared = rng.integers(0, arch.vocab_size, 8).tolist()  # common prefix
+    handles = [
+        serve.submit(shared + rng.integers(0, arch.vocab_size, 8).tolist())
+        for _ in range(6)
+    ]
 
-    s = eng.monitor.summary()
-    print(f"\nserved {int(s['n'])} requests")
-    for r in reqs[:3]:
-        print(f"  {r.request_id} -> worker {r.worker_id}, {len(r.output_tokens)} tokens")
-    for p in eng.pairs:
-        d = p.spec.last_decision
-        print(
-            f"  pair {p.worker_id}: acceptance {p.acceptance:.2f}, "
-            f"spec depth {d.bucket_depth if d else '-'}, "
-            f"cache hit {eng.monitor.workers[p.worker_id].cache_hit_rate:.2f}"
-        )
+    # stream the first request token-by-token (this drives the shared engine,
+    # so the other five decode concurrently in the same batch)
+    streamed = list(handles[0].stream())
+    print(f"\n{handles[0].request_id} streamed {len(streamed)} tokens: {streamed[:6]}…")
+    for h in handles[1:]:
+        h.result()
+
+    s = serve.summary()
+    print(f"served {int(s['n'])} requests")
+    for h in handles[:3]:
+        slo = h.slo()
+        print(f"  {h.request_id} -> worker {slo['worker_id']}, "
+              f"{slo['n_tokens']} tokens, ttft {slo['ttft']:.0f} ticks")
+    for w in serve.worker_stats():
+        print(f"  pair {w['worker_id']}: acceptance {w['acceptance']:.2f}, "
+              f"spec depth {w['spec_depth'] or '-'}, "
+              f"cache hit {w['cache_hit_rate']:.2f}")
     print("OK")
 
 

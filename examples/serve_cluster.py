@@ -10,56 +10,44 @@ full StreamServe stack, exercising every production feature in one run —
 
   PYTHONPATH=src python examples/serve_cluster.py
 """
-import dataclasses
-
-import jax
 import numpy as np
 
-from repro.configs import get_config, reduced_config
-from repro.core import EngineConfig, PipeServeEngine
+from repro.api import ServeConfig, StreamServe
 from repro.data.workloads import sample_mixed, sample_requests
-from repro.distributed.sharding import unzip_params
-from repro.models import build_model
-from repro.serving.request import Request, SamplingParams
-from repro.serving.simulator import ServeSimulator, streamserve_config
+from repro.serving.simulator import ServeSimulator
 
 
 def real_engine_demo():
     print("=" * 70)
     print("REAL JAX ENGINE (reduced model, CPU): failure + re-route")
     print("=" * 70)
-    cfg = dataclasses.replace(reduced_config("qwen3-1.7b"), n_layers=2)
-    model = build_model(cfg)
-    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
-    eng = PipeServeEngine(cfg, params, n_pairs=2,
-                          econf=EngineConfig(max_batch=3, max_len=96))
+    serve = StreamServe(ServeConfig.reduced_smoke("qwen3-1.7b"))
     rng = np.random.default_rng(1)
-    reqs = [
-        Request(prompt=rng.integers(0, cfg.vocab_size, 12).tolist(),
-                params=SamplingParams(max_new_tokens=10))
+    handles = [
+        serve.submit(rng.integers(0, serve.arch.vocab_size, 12).tolist())
         for _ in range(8)
     ]
-    for r in reqs:
-        eng.submit(r)
     for _ in range(4):
-        eng.step()
-    n = eng.fail_worker(1)
+        serve.step()
+    n = serve.fail_worker(1)
     print(f"  !! pair 1 died; {n} requests re-routed to pair 0")
-    eng.run_until_done(max_steps=800)
-    done = eng.monitor.completed
+    serve.run_until_done(max_steps=800)
+    done = serve.monitor.completed
     print(f"  completed {len(done)}/8 on pairs "
           f"{sorted(set(r.worker_id for r in done))}\n")
     assert len(done) == 8
+    assert all(h.done for h in handles)
 
 
 def cluster_scale_demo():
     print("=" * 70)
     print("CLUSTER SCALE (event simulator, llama2-7b costs, v5e): elastic scale-out")
     print("=" * 70)
-    cfg = get_config("llama2-7b")
+    scfg = ServeConfig.paper_stream_pairs("llama2-7b", max_batch=32, kv_blocks=2048)
+    cfg = scfg.build_arch_config()
 
     # phase 1: two pairs under rising mixed multi-tenant load
-    sim = ServeSimulator(cfg, streamserve_config())
+    sim = ServeSimulator(cfg, scfg.to_sim_config())
     reqs = sample_mixed(60, seed=0, arrival_rate=40.0)  # 240 requests @ 40/s
     # a worker fails at t=1s; a replacement pair joins at t=0 (warm spare)
     sim.inject_failure(1.0, wid=0)
@@ -87,9 +75,10 @@ def workload_comparison():
     print("=" * 70)
     print("WORKLOAD SENSITIVITY (the paper's §4.2-4.5 narrative)")
     print("=" * 70)
-    cfg = get_config("llama2-7b")
+    scfg = ServeConfig.paper_stream_pairs("llama2-7b", max_batch=32, kv_blocks=2048)
+    cfg = scfg.build_arch_config()
     for wl in ("alpaca", "gsm8k", "humaneval", "sum"):
-        sim = ServeSimulator(cfg, streamserve_config())
+        sim = ServeSimulator(cfg, scfg.to_sim_config())
         s = sim.run(sample_requests(wl, 80, seed=0, arrival_rate=10.0))
         depths = [t["depth"] for t in sim.trace if t["depth"] > 0]
         print(

@@ -3,30 +3,27 @@ workload — the paper's Table 9 mechanism, per-suite.
 
   PYTHONPATH=src python examples/spec_depth_study.py
 """
-import copy
 
-import numpy as np
-
-from repro.configs import get_config
+from repro.api import ServeConfig
 from repro.data.workloads import sample_requests
-from repro.serving.simulator import ServeSimulator, streamserve_config
+from repro.serving.simulator import ServeSimulator
 
 
 def main():
-    cfg = get_config("llama2-7b")
+    base = ServeConfig.paper_stream_pairs("llama2-7b", max_batch=32, kv_blocks=2048)
+    cfg = base.build_arch_config()
     depths = [0, 2, 3, 5, 8, 12, 20]
     print(f"{'workload':10s} " + " ".join(f"d={d:<4d}" for d in depths) + " adaptive")
     for wl in ("alpaca", "gsm8k", "humaneval", "sum"):
         row = []
         for d in depths:
-            conf = streamserve_config(
-                speculative=d > 0, adaptive=False, fixed_depth=d
-            )
+            conf = base.replace(
+                spec_policy="fixed" if d > 0 else "none", fixed_depth=d
+            ).to_sim_config()
             sim = ServeSimulator(cfg, conf)
             s = sim.run(sample_requests(wl, 80, seed=0, arrival_rate=10.0))
             row.append(s["throughput_mean"])
-        conf = streamserve_config()
-        sim = ServeSimulator(cfg, copy.deepcopy(conf))
+        sim = ServeSimulator(cfg, base.to_sim_config())
         s = sim.run(sample_requests(wl, 80, seed=0, arrival_rate=10.0))
         ada = s["throughput_mean"]
         best_fixed = max(row[1:])

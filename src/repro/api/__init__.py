@@ -1,0 +1,41 @@
+"""Public serving API: one config object, pluggable policies, online serving.
+
+    from repro.api import ServeConfig, StreamServe
+
+    serve = StreamServe(ServeConfig.reduced_smoke())
+    handle = serve.submit(prompt_tokens)
+    for token in handle.stream():
+        ...
+
+Extension points (string-keyed registries)::
+
+    from repro.api import register_router, register_draft, register_spec_policy
+"""
+from repro.api.config import ServeConfig  # noqa: F401
+from repro.api.frontend import RequestHandle, StreamServe  # noqa: F401
+from repro.api.registry import (  # noqa: F401
+    DRAFTS,
+    ROUTERS,
+    SPEC_POLICIES,
+    register_draft,
+    register_router,
+    register_spec_policy,
+    resolve_draft,
+    resolve_router,
+    resolve_spec_policy,
+)
+
+__all__ = [
+    "ServeConfig",
+    "StreamServe",
+    "RequestHandle",
+    "ROUTERS",
+    "DRAFTS",
+    "SPEC_POLICIES",
+    "register_router",
+    "register_draft",
+    "register_spec_policy",
+    "resolve_router",
+    "resolve_draft",
+    "resolve_spec_policy",
+]

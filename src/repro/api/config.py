@@ -1,0 +1,227 @@
+"""`ServeConfig` — the one validated configuration object for the stack.
+
+Composes architecture, topology, engine, router, draft, speculation and
+workload settings that were previously hand-wired across ``launch/serve.py``,
+the examples and the benchmarks.  Round-trips through plain dicts and YAML,
+and knows how to build the lower-level config objects each layer consumes:
+
+    cfg = ServeConfig.reduced_smoke()            # preset factory
+    cfg = cfg.replace(router="roundrobin")       # validated copy-update
+    arch = cfg.build_arch_config()               # -> ArchConfig
+    econf = cfg.build_engine_config()            # -> EngineConfig
+    sim = cfg.to_sim_config()                    # -> SimConfig (simulator)
+
+Policy fields (``router``, ``draft``, ``spec_policy``) are registry names —
+see :mod:`repro.api.registry` — so plugins validate exactly like built-ins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.api.registry import DRAFTS, ROUTERS, SPEC_POLICIES
+from repro.core.flowguard import FlowGuardConfig
+from repro.core.specustream import SpecuStreamConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    # ---- model ------------------------------------------------------------
+    arch: str = "qwen3-1.7b"         # name in repro.configs.ARCHS
+    reduced: bool = True             # reduced_config() for CPU; full on TPU
+    n_layers: Optional[int] = None   # optional layer-count override
+    # ---- topology ---------------------------------------------------------
+    n_pairs: int = 2                 # disaggregated stream pairs
+    # ---- engine -----------------------------------------------------------
+    max_batch: int = 8               # decode slots per pair
+    max_len: int = 512               # per-slot KV capacity (tokens)
+    temperature: float = 0.0
+    kv_blocks: int = 4096
+    kv_block_size: int = 16
+    # ---- policies (registry names) ----------------------------------------
+    router: str = "flowguard"
+    flowguard: Optional[FlowGuardConfig] = None
+    draft: str = "ngram"
+    max_ngram: int = 4
+    draft_layers: int = 2            # layer count of the small 'model' draft
+    spec_policy: str = "specustream"
+    fixed_depth: int = 5
+    spec: Optional[SpecuStreamConfig] = None
+    # ---- workload defaults ------------------------------------------------
+    max_new_tokens: int = 64         # default SamplingParams.max_new_tokens
+    seed: int = 0
+
+    # ------------------------------------------------------------ validation
+    def __post_init__(self) -> None:
+        from repro.configs import ARCHS
+
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; available: {sorted(ARCHS)}")
+        if self.router not in ROUTERS:
+            raise ValueError(f"unknown router {self.router!r}; registered: {ROUTERS.names()}")
+        if self.draft not in DRAFTS:
+            raise ValueError(f"unknown draft {self.draft!r}; registered: {DRAFTS.names()}")
+        if self.spec_policy not in SPEC_POLICIES:
+            raise ValueError(
+                f"unknown spec_policy {self.spec_policy!r}; "
+                f"registered: {SPEC_POLICIES.names()}"
+            )
+        for field, lo in [
+            ("n_pairs", 1), ("max_batch", 1), ("max_len", 8), ("kv_blocks", 1),
+            ("kv_block_size", 1), ("max_ngram", 1), ("draft_layers", 1),
+            ("fixed_depth", 0), ("max_new_tokens", 1),
+        ]:
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < lo:
+                raise ValueError(f"{field} must be an int >= {lo} (got {v!r})")
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
+        if self.n_layers is not None and self.n_layers < 1:
+            raise ValueError(f"n_layers override must be >= 1 (got {self.n_layers})")
+        if self.max_new_tokens >= self.max_len:
+            raise ValueError(
+                f"max_new_tokens ({self.max_new_tokens}) must leave prompt room "
+                f"under max_len ({self.max_len})"
+            )
+
+    # ------------------------------------------------------------ builder ops
+    def replace(self, **updates) -> "ServeConfig":
+        """Copy-update with re-validation (the builder step)."""
+        return dataclasses.replace(self, **updates)
+
+    # ------------------------------------------------------------- round-trip
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ServeConfig":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServeConfig keys: {sorted(unknown)}")
+        if isinstance(d.get("flowguard"), dict):
+            d["flowguard"] = FlowGuardConfig(**d["flowguard"])
+        if isinstance(d.get("spec"), dict):
+            d["spec"] = SpecuStreamConfig(**d["spec"])
+        return cls(**d)
+
+    def to_yaml(self, path: Optional[str] = None) -> str:
+        import yaml
+
+        text = yaml.safe_dump(self.to_dict(), sort_keys=False)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_yaml(cls, path_or_text: str) -> "ServeConfig":
+        import os
+
+        import yaml
+
+        looks_like_path = "\n" not in path_or_text and path_or_text.strip().endswith(
+            (".yaml", ".yml")
+        )
+        if looks_like_path:
+            with open(path_or_text) as f:  # typo'd paths raise FileNotFoundError
+                path_or_text = f.read()
+        elif os.path.exists(path_or_text):
+            with open(path_or_text) as f:
+                path_or_text = f.read()
+        data = yaml.safe_load(path_or_text)
+        if not isinstance(data, dict):
+            raise ValueError("ServeConfig YAML must be a mapping")
+        return cls.from_dict(data)
+
+    # --------------------------------------------------------------- presets
+    @classmethod
+    def reduced_smoke(cls, arch: str = "qwen3-1.7b", **overrides) -> "ServeConfig":
+        """Tiny CPU configuration: every test/example/CI entry point."""
+        base = dict(
+            arch=arch, reduced=True, n_layers=2, n_pairs=2,
+            max_batch=3, max_len=96, max_new_tokens=12,
+            kv_blocks=1024, kv_block_size=8,
+        )
+        base.update(overrides)
+        return cls(**base)
+
+    @classmethod
+    def paper_stream_pairs(cls, arch: str = "qwen3-1.7b", **overrides) -> "ServeConfig":
+        """The paper's §4 operating point: 2 stream pairs, FlowGuard +
+        SpecuStream, full-size model (TPU/GPU scale)."""
+        base = dict(
+            arch=arch, reduced=False, n_pairs=2,
+            max_batch=16, max_len=2048, max_new_tokens=512, kv_blocks=8192,
+        )
+        base.update(overrides)
+        return cls(**base)
+
+    @classmethod
+    def ablation_fixed_depth(cls, depth: int, arch: str = "qwen3-1.7b",
+                             **overrides) -> "ServeConfig":
+        """Table 8/9 ablation row: fixed speculation depth (0 disables)."""
+        base = dict(
+            arch=arch, spec_policy="fixed" if depth > 0 else "none",
+            fixed_depth=max(depth, 0), draft="ngram" if depth > 0 else "none",
+        )
+        base.update(overrides)
+        return cls.reduced_smoke(**base) if base.get("reduced", True) else cls(**base)
+
+    # ------------------------------------------------------- layer factories
+    def build_arch_config(self):
+        from repro.configs import get_config, reduced_config
+
+        cfg = reduced_config(self.arch) if self.reduced else get_config(self.arch)
+        if self.n_layers is not None:
+            cfg = dataclasses.replace(cfg, n_layers=self.n_layers)
+        return cfg
+
+    def build_draft_arch_config(self):
+        """Arch config for the small 'model' draft (same family, fewer layers)."""
+        base = self.build_arch_config()
+        return dataclasses.replace(
+            base, n_layers=min(self.draft_layers, base.n_layers),
+            name=base.name + "-draft",
+        )
+
+    def build_engine_config(self):
+        from repro.core.engine import EngineConfig
+
+        return EngineConfig(
+            max_batch=self.max_batch,
+            max_len=self.max_len,
+            temperature=self.temperature,
+            kv_blocks=self.kv_blocks,
+            kv_block_size=self.kv_block_size,
+            draft=self.draft,
+            max_ngram=self.max_ngram,
+            adaptive=self.spec_policy == "specustream",
+            fixed_depth=self.fixed_depth,
+            spec_config=self.spec,
+            router=self.router,
+            router_config=self.flowguard,
+            spec_policy=self.spec_policy,
+        )
+
+    def to_sim_config(self, **overrides):
+        """Map to the discrete-event simulator's SimConfig (benchmark path)."""
+        from repro.serving.simulator import SimConfig
+
+        base = dict(
+            mode="streamserve",
+            n_workers=self.n_pairs,
+            router=self.router,
+            speculative=self.draft != "none" and self.spec_policy != "none",
+            adaptive=self.spec_policy == "specustream",
+            fixed_depth=self.fixed_depth,
+            max_batch=self.max_batch,
+            kv_blocks=self.kv_blocks,
+            kv_block_size=self.kv_block_size,
+            spec_config=self.spec,
+            flowguard_config=self.flowguard,
+            seed=self.seed,
+        )
+        base.update(overrides)
+        return SimConfig(**base)

@@ -1,0 +1,227 @@
+"""`StreamServe` — the online serving front-end over `PipeServeEngine`.
+
+Turns the engine's closed batch loop into an online service: requests are
+submitted at any time (including mid-flight), each submission returns a
+:class:`RequestHandle`, and handles expose per-token streaming, blocking
+results, cancellation and SLO metadata.  The event loop is ``step()``-driven
+and single-threaded — pulling on any handle's ``stream()`` advances the
+whole engine, so concurrent handles make progress together, exactly like
+the continuous-batching scheduler underneath:
+
+    serve = StreamServe(ServeConfig.reduced_smoke())
+    h = serve.submit(prompt_tokens)
+    for tok in h.stream():          # yields tokens as the engine emits them
+        ...
+    print(h.slo())                  # ttft / tpot / latency (engine ticks)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from repro.api.config import ServeConfig
+from repro.serving.request import Request, RequestState, SamplingParams
+
+_TERMINAL = (RequestState.FINISHED, RequestState.FAILED, RequestState.CANCELLED)
+
+
+class RequestHandle:
+    """Live view of one submitted request.
+
+    ``stream()`` is a pull-based iterator: each ``next()`` either yields an
+    already-emitted token or drives the shared engine forward one tick until
+    this request produces output (or finishes).  ``result()`` drains the
+    stream and returns all tokens.  ``cancel()`` aborts the request whether
+    it is still queued or mid-decode.
+    """
+
+    def __init__(self, serve: "StreamServe", request: Request,
+                 slo_ttft: Optional[float] = None, slo_tpot: Optional[float] = None):
+        self._serve = serve
+        self.request = request
+        self.slo_ttft = slo_ttft      # target time-to-first-token (engine ticks)
+        self.slo_tpot = slo_tpot      # target mean time-per-output-token
+        self._cursor = 0
+
+    # ----------------------------------------------------------------- state
+    @property
+    def request_id(self) -> str:
+        return self.request.request_id
+
+    @property
+    def state(self) -> RequestState:
+        return self.request.state
+
+    @property
+    def done(self) -> bool:
+        return self.request.state in _TERMINAL
+
+    # ------------------------------------------------------------- streaming
+    def stream(self, max_stall_steps: int = 10_000) -> Iterator[int]:
+        """Yield output tokens as they are emitted, driving the engine."""
+        stalled = 0
+        while True:
+            out = self.request.output_tokens
+            if self._cursor < len(out):
+                stalled = 0
+                tok = out[self._cursor]
+                self._cursor += 1
+                yield tok
+                continue
+            if self.done:
+                return
+            self._serve.step()
+            stalled += 1
+            if stalled > max_stall_steps:
+                raise RuntimeError(
+                    f"{self.request_id} made no progress in {max_stall_steps} "
+                    "engine steps (KV pool exhausted or all pairs unhealthy?)"
+                )
+
+    def result(self, max_stall_steps: int = 10_000) -> List[int]:
+        """Block (drive the engine) until terminal; return all output tokens."""
+        for _ in self.stream(max_stall_steps=max_stall_steps):
+            pass
+        return list(self.request.output_tokens)
+
+    def cancel(self) -> bool:
+        return self._serve.cancel(self.request_id)
+
+    # ------------------------------------------------------------------- SLO
+    def slo(self) -> Dict[str, Any]:
+        """Latency metadata in engine ticks (wall-clock on real hardware)."""
+        req = self.request
+        arrived = req.arrival_time if req.arrival_time is not None else 0.0
+        ttft = (req.t_first_token - arrived) if req.t_first_token else None
+        latency = (req.t_end - arrived) if self.done and req.t_end else None
+        gaps = [b - a for a, b in zip(req.token_times, req.token_times[1:])]
+        tpot = sum(gaps) / len(gaps) if gaps else None
+        return {
+            "request_id": req.request_id,
+            "state": req.state.value,
+            "worker_id": req.worker_id,
+            "arrival_time": req.arrival_time,
+            "n_tokens": len(req.output_tokens),
+            "ttft": ttft,
+            "tpot": tpot,
+            "latency": latency,
+            "ttft_ok": None if ttft is None or self.slo_ttft is None
+            else ttft <= self.slo_ttft,
+            "tpot_ok": None if tpot is None or self.slo_tpot is None
+            else tpot <= self.slo_tpot,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"RequestHandle({self.request_id}, state={self.state.value}, "
+                f"tokens={len(self.request.output_tokens)})")
+
+
+class StreamServe:
+    """Single public entry point to the serving stack.
+
+    Builds the model (or accepts externally-trained ``params``), resolves all
+    policies through the registries, and wraps :class:`PipeServeEngine` with
+    an online submit/stream/cancel surface.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None, *, params=None,
+                 arch_cfg=None, **overrides):
+        import jax
+
+        from repro.core.engine import PipeServeEngine
+        from repro.distributed.sharding import unzip_params
+        from repro.models import build_model
+
+        config = config or ServeConfig()
+        if overrides:
+            config = config.replace(**overrides)
+        self.config = config
+        self.arch = arch_cfg if arch_cfg is not None else config.build_arch_config()
+        if params is None:
+            model = build_model(self.arch)
+            params, _ = unzip_params(model.init(jax.random.PRNGKey(config.seed)))
+        draft_cfg = draft_params = None
+        if config.draft == "model":
+            draft_cfg = config.build_draft_arch_config()
+            draft_params, _ = unzip_params(
+                build_model(draft_cfg).init(jax.random.PRNGKey(config.seed + 1))
+            )
+        self.engine = PipeServeEngine(
+            self.arch, params,
+            n_pairs=config.n_pairs,
+            econf=config.build_engine_config(),
+            draft_cfg=draft_cfg,
+            draft_params=draft_params,
+        )
+
+    # ------------------------------------------------------------ submission
+    def submit(self, prompt: Sequence[int],
+               params: Optional[SamplingParams] = None, *,
+               slo_ttft: Optional[float] = None,
+               slo_tpot: Optional[float] = None) -> RequestHandle:
+        """Submit a tokenised prompt; returns immediately with a handle.
+
+        Callable at any time — before the first ``step()`` or while other
+        requests are mid-decode (online arrival)."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("prompt must be non-empty")
+        if params is None:
+            params = SamplingParams(
+                temperature=self.config.temperature,
+                max_new_tokens=self.config.max_new_tokens,
+            )
+        if len(prompt) + params.max_new_tokens > self.config.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({params.max_new_tokens}) "
+                f"exceeds max_len ({self.config.max_len})"
+            )
+        req = Request(prompt=prompt, params=params)
+        self.engine.submit(req)
+        return RequestHandle(self, req, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+
+    def cancel(self, request_id: str) -> bool:
+        return self.engine.cancel(request_id)
+
+    # ------------------------------------------------------------ event loop
+    def step(self) -> int:
+        """Advance the engine one tick; returns tokens emitted this tick."""
+        return self.engine.step()
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        """Drain every in-flight request (batch mode)."""
+        self.engine.run_until_done(max_steps=max_steps)
+
+    @property
+    def pending(self) -> int:
+        """Requests queued or mid-decode across all pairs."""
+        return self.engine.scheduler.pending_total() + sum(
+            len(p.active_slots()) for p in self.engine.pairs if p.healthy
+        )
+
+    # ----------------------------------------------------------------- admin
+    def fail_worker(self, worker_id: int) -> int:
+        return self.engine.fail_worker(worker_id)
+
+    @property
+    def monitor(self):
+        return self.engine.monitor
+
+    def summary(self) -> Dict[str, float]:
+        return self.engine.monitor.summary()
+
+    def worker_stats(self) -> List[Dict[str, Any]]:
+        """Per-pair operational snapshot (routing/speculation signals)."""
+        out = []
+        for pair in self.engine.pairs:
+            m = self.engine.monitor.workers[pair.worker_id]
+            d = getattr(pair.spec, "last_decision", None)
+            out.append({
+                "worker_id": pair.worker_id,
+                "healthy": pair.healthy,
+                "acceptance": pair.acceptance,
+                "cache_hit_rate": m.cache_hit_rate,
+                "queue_depth": m.queue_depth,
+                "active_load": pair.load,
+                "spec_depth": d.bucket_depth if d else None,
+            })
+        return out

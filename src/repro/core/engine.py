@@ -14,23 +14,27 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import (
+    register_draft,
+    resolve_draft,
+    resolve_router,
+    resolve_spec_policy,
+)
 from repro.configs.base import ArchConfig
-from repro.core.flowguard import FlowGuard
 from repro.core.metrics import PerformanceMonitor, RequestRecord
 from repro.core.scheduler import StreamScheduler
-from repro.core.specustream import DEPTH_BUCKETS, SpecDecision, SpecuStream
+from repro.core.specustream import SpecDecision
 from repro.models import build_model
-from repro.serving.draft import ModelDraft, NGramDraft
+from repro.serving.draft import DraftContext, EngineDraft
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_probs
 from repro.serving.speculative import verify_tokens
 
 
@@ -91,11 +95,20 @@ class EngineConfig:
     temperature: float = 0.0
     kv_blocks: int = 4096
     kv_block_size: int = 16
-    draft: str = "ngram"            # "ngram" | "model" | "none"
+    draft: str = "ngram"            # any name in repro.api.DRAFTS
     max_ngram: int = 4
     adaptive: bool = True            # SpecuStream on (False => fixed depth)
     fixed_depth: int = 5
     spec_config: Any = None
+    # registry names; spec_policy=None derives from the legacy `adaptive` flag
+    router: str = "flowguard"        # any name in repro.api.ROUTERS
+    router_config: Any = None
+    spec_policy: Optional[str] = None  # any name in repro.api.SPEC_POLICIES
+
+    def resolved_spec_policy(self) -> str:
+        if self.spec_policy is not None:
+            return self.spec_policy
+        return "specustream" if self.adaptive else "fixed"
 
 
 class StreamPair:
@@ -116,19 +129,15 @@ class StreamPair:
         self.monitor = monitor
         self.lane = ModelLane(cfg, params, econf.max_batch, econf.max_len)
         self.kv = KVCacheManager(econf.kv_blocks, econf.kv_block_size)
-        if econf.adaptive:
-            self.spec = SpecuStream(econf.spec_config)
-        else:
-            from repro.core.specustream import FixedSpeculation
-
-            self.spec = FixedSpeculation(econf.fixed_depth)
-        self.draft_lane: Optional[ModelLane] = None
-        self.ngram: Optional[NGramDraft] = None
-        if econf.draft == "model":
-            assert draft_cfg is not None and draft_params is not None
-            self.draft_lane = ModelLane(draft_cfg, draft_params, econf.max_batch, econf.max_len)
-        elif econf.draft == "ngram":
-            self.ngram = NGramDraft(econf.max_ngram, cfg.vocab_size)
+        self.spec = resolve_spec_policy(
+            econf.resolved_spec_policy(),
+            config=econf.spec_config,
+            fixed_depth=econf.fixed_depth,
+        )
+        self.draft: EngineDraft = resolve_draft(
+            econf.draft,
+            DraftContext(cfg=cfg, econf=econf, draft_cfg=draft_cfg, draft_params=draft_params),
+        )
         # slot state -----------------------------------------------------------
         self.slot_req: List[Optional[Request]] = [None] * econf.max_batch
         self.pending = np.zeros((econf.max_batch,), np.int64)
@@ -169,9 +178,7 @@ class StreamPair:
         # --- KV transfer (NIXL analogue): insert into the decode lane --------
         req.state = RequestState.TRANSFERRING
         self.lane.insert(slot, small_cache)
-        if self.draft_lane is not None:
-            _, dsc = self.draft_lane.prefill(batch)
-            self.draft_lane.insert(slot, dsc)
+        self.draft.on_admit(self, batch, slot)
         self.key, sk = jax.random.split(self.key)
         first = int(sample(sk, last_logits, self.econf.temperature)[0])
         req.state = RequestState.DECODING
@@ -197,7 +204,7 @@ class StreamPair:
             self.load,
             self.monitor.workers[self.worker_id].recent_throughput,
         )
-        k = decision.bucket_depth
+        k = min(decision.bucket_depth, self.draft.max_depth)
         active_mask = np.zeros((B,), bool)
         active_mask[active] = True
 
@@ -213,10 +220,7 @@ class StreamPair:
             return emitted
 
         # ---- draft proposal --------------------------------------------------
-        if self.draft_lane is not None:
-            draft_toks, draft_q = self._model_draft_propose(k)
-        else:
-            draft_toks, draft_q = self.ngram.propose(self.histories, k)
+        draft_toks, draft_q = self.draft.propose(self, k)
         draft_toks = jnp.asarray(draft_toks, jnp.int32)
         draft_q = jnp.asarray(draft_q, jnp.float32)
 
@@ -238,11 +242,7 @@ class StreamPair:
         n_acc = np.asarray(res.n_accepted)
         nxt = np.asarray(res.next_token)
         self.lane.commit(old_len, res.accept_idx)
-        if self.draft_lane is not None:
-            # draft ingested k tokens [pending, d_1..d_{k-1}]
-            self.draft_lane.commit(
-                self._draft_old_len, jnp.minimum(res.accept_idx, k - 1)
-            )
+        self.draft.on_commit(self, res.accept_idx, k)
         accepted_frac = float(n_acc[active].mean()) / max(k, 1)
         self.acceptance = 0.8 * self.acceptance + 0.2 * accepted_frac
 
@@ -252,23 +252,6 @@ class StreamPair:
             toks = [int(t) for t in draft_np[s, : int(n_acc[s])]] + [int(nxt[s])]
             emitted += self._emit(s, toks, now)
         return emitted
-
-    def _model_draft_propose(self, k: int):
-        dl = self.draft_lane
-        self._draft_old_len = dl.lengths
-        toks, qs = [], []
-        cur = jnp.asarray(self.pending, jnp.int32)[:, None]
-        for _ in range(k):
-            self.key, sk = jax.random.split(self.key)
-            logits = dl.decode(cur)
-            from repro.serving.sampling import sample_probs
-
-            t, q = sample_probs(sk, logits[:, -1], self.econf.temperature)
-            toks.append(t)
-            qs.append(q)
-            cur = t[:, None]
-        # the k-th draft token was never ingested by the draft; commit handles
-        return jnp.stack(toks, 1), jnp.stack(qs, 1)
 
     def _emit(self, slot: int, tokens: List[int], now: float) -> int:
         req = self.slot_req[slot]
@@ -317,6 +300,50 @@ class StreamPair:
         )
 
 
+class ModelLaneDraft(EngineDraft):
+    """Small-transformer draft on its own :class:`ModelLane`, mirroring the
+    target's per-slot prefill/insert/commit cache protocol (the EAGLE-class
+    production path)."""
+
+    def __init__(self, cfg: ArchConfig, params, max_batch: int, max_len: int,
+                 temperature: float):
+        self.lane = ModelLane(cfg, params, max_batch, max_len)
+        self.temperature = temperature
+        self._old_len = None
+
+    def on_admit(self, pair, batch, slot: int) -> None:
+        _, small_cache = self.lane.prefill(batch)
+        self.lane.insert(slot, small_cache)
+
+    def propose(self, pair, k: int):
+        self._old_len = self.lane.lengths
+        toks, qs = [], []
+        cur = jnp.asarray(pair.pending, jnp.int32)[:, None]
+        for _ in range(k):
+            pair.key, sk = jax.random.split(pair.key)
+            logits = self.lane.decode(cur)
+            t, q = sample_probs(sk, logits[:, -1], self.temperature)
+            toks.append(t)
+            qs.append(q)
+            cur = t[:, None]
+        # the k-th draft token was never ingested by the draft; commit handles
+        return jnp.stack(toks, 1), jnp.stack(qs, 1)
+
+    def on_commit(self, pair, accept_idx, k: int) -> None:
+        # draft ingested k tokens [pending, d_1..d_{k-1}]
+        self.lane.commit(self._old_len, jnp.minimum(accept_idx, k - 1))
+
+
+@register_draft("model")
+def _make_model_draft(ctx: DraftContext) -> ModelLaneDraft:
+    if ctx.draft_cfg is None or ctx.draft_params is None:
+        raise ValueError("draft='model' requires draft_cfg and draft_params")
+    return ModelLaneDraft(
+        ctx.draft_cfg, ctx.draft_params,
+        ctx.econf.max_batch, ctx.econf.max_len, ctx.econf.temperature,
+    )
+
+
 class PipeServeEngine:
     """Full StreamServe system on the real JAX execution path (paper Alg 1)."""
 
@@ -331,9 +358,13 @@ class PipeServeEngine:
         draft_params=None,
     ):
         self.econf = econf or EngineConfig()
+        if router is None:
+            router = resolve_router(self.econf.router, config=self.econf.router_config)
+        elif isinstance(router, str):
+            router = resolve_router(router, config=self.econf.router_config)
         self._now = 0.0
         self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
-        self.scheduler = StreamScheduler(n_pairs, router or FlowGuard(), self.monitor)
+        self.scheduler = StreamScheduler(n_pairs, router, self.monitor)
         self.pairs = [
             StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
             for i in range(n_pairs)
@@ -346,6 +377,27 @@ class PipeServeEngine:
     # ----------------------------------------------------------------- driving
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req, self._now)
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a request wherever it is: still queued (drop from the
+        scheduler) or mid-decode (free its slot and KV).  Returns True if the
+        request was found and cancelled, False if unknown or already done."""
+        req = self.scheduler.cancel(request_id)
+        if req is not None:
+            req.state = RequestState.CANCELLED
+            req.t_end = self._now
+            return True
+        for pair in self.pairs:
+            for slot, req in enumerate(pair.slot_req):
+                if req is None or req.request_id != request_id:
+                    continue
+                pair.slot_req[slot] = None
+                pair.histories[slot] = []
+                pair.kv.free_sequence(req.request_id)
+                req.state = RequestState.CANCELLED
+                req.t_end = self._now
+                return True
+        return False
 
     def fail_worker(self, worker_id: int) -> int:
         """Simulate a node failure: drop the pair, re-route queued AND

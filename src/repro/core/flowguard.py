@@ -17,8 +17,9 @@ actually M=1.0 > 0.85 excludes; queue ≥ 42.5% of Q_max alone excludes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.api.registry import register_router
 from repro.core.metrics import STALENESS_S, WorkerMetrics
 
 
@@ -108,3 +109,15 @@ class RoundRobinRouter:
         pick = candidates[self._next % len(candidates)]
         self._next += 1
         return pick, {}
+
+
+@register_router("flowguard")
+def _make_flowguard(config: Optional[FlowGuardConfig] = None) -> FlowGuard:
+    if isinstance(config, dict):
+        config = FlowGuardConfig(**config)
+    return FlowGuard(config)
+
+
+@register_router("roundrobin")
+def _make_roundrobin(config=None) -> RoundRobinRouter:
+    return RoundRobinRouter()

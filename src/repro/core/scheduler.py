@@ -8,7 +8,6 @@ behaviour exercised by tests/test_fault_tolerance.py.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Protocol, Tuple
 
@@ -44,7 +43,9 @@ class StreamScheduler:
         worker, _ = self.router.select(self.monitor.snapshot(), now, healthy)
         req.worker_id = worker
         req.state = RequestState.QUEUED
-        req.arrival_time = now if req.arrival_time == 0.0 else req.arrival_time
+        # stamp only unset arrivals — an explicit t=0 arrival is legitimate
+        if req.arrival_time is None:
+            req.arrival_time = now
         self.prefill_queues[worker].append(req)
         self.routing_log.append((req.request_id, worker))
         return worker
@@ -55,6 +56,15 @@ class StreamScheduler:
 
     def queue_depth(self, worker_id: int) -> int:
         return len(self.prefill_queues[worker_id])
+
+    def cancel(self, request_id: str) -> Optional[Request]:
+        """Drop a still-queued request.  Returns it, or None if not queued."""
+        for q in self.prefill_queues.values():
+            for req in q:
+                if req.request_id == request_id:
+                    q.remove(req)
+                    return req
+        return None
 
     # ---------------------------------------------------------- fault handling
     def mark_unhealthy(self, worker_id: int, now: float) -> int:

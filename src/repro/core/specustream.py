@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro.api.registry import register_spec_policy
+
 DEPTH_BUCKETS: Tuple[int, ...] = (2, 3, 4, 5, 6, 8, 10, 12, 16, 20)
 
 
@@ -118,3 +120,20 @@ class FixedSpeculation:
             flow_magnitude=0.0,
             gradient=0.0,
         )
+
+
+@register_spec_policy("specustream")
+def _make_specustream(config: Optional[SpecuStreamConfig] = None, fixed_depth: int = 5):
+    if isinstance(config, dict):
+        config = SpecuStreamConfig(**config)
+    return SpecuStream(config)
+
+
+@register_spec_policy("fixed")
+def _make_fixed(config=None, fixed_depth: int = 5):
+    return FixedSpeculation(fixed_depth)
+
+
+@register_spec_policy("none")
+def _make_no_spec(config=None, fixed_depth: int = 5):
+    return FixedSpeculation(0)

@@ -27,7 +27,8 @@ adaptation differences (the paper's §4.2–4.5 narrative).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import zlib
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -122,7 +123,9 @@ def sample_requests(
 ) -> List[SimRequest]:
     """80-query suite (paper §4) with Poisson arrivals (or all-at-once)."""
     prof = WORKLOADS[workload]
-    rng = np.random.default_rng(seed ^ hash(workload) & 0xFFFF)
+    # stable across processes (builtin hash() is randomized by PYTHONHASHSEED,
+    # which made every benchmark/test trace differ run to run)
+    rng = np.random.default_rng(seed ^ (zlib.crc32(workload.encode()) & 0xFFFF))
     p_lens, o_lens = prof.sample_lengths(rng, n)
     arrivals = (
         np.cumsum(rng.exponential(1.0 / arrival_rate, n))

@@ -17,11 +17,11 @@ These are the primitives behind the distribution features:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+from jax.sharding import Mesh, PartitionSpec as PS
 
 
 def hierarchical_all_reduce(x: jax.Array, pod_axis: str, inner_axis: str) -> jax.Array:

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List
 
 
 @dataclasses.dataclass

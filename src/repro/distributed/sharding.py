@@ -17,10 +17,9 @@ Mesh axes
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 AxisName = Optional[str]

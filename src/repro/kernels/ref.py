@@ -15,7 +15,6 @@ All attention math accumulates in float32 regardless of input dtype.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

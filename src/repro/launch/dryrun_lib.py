@@ -7,22 +7,20 @@ Import this ONLY from an entrypoint that has already set
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import re
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, shape_applicable
 from repro.distributed.sharding import (
     DEFAULT_RULES,
     INFERENCE_RULES,
-    logical_to_spec,
     tree_specs,
     unzip_params,
     use_rules,

@@ -7,7 +7,7 @@ device initialisation.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 

@@ -1,12 +1,15 @@
 """Serving driver: the full StreamServe stack on the REAL JAX engine.
 
-Runs PipeServeEngine (FlowGuard routing + SpecuStream adaptive speculation
-+ disaggregated stream pairs) over a synthetic workload with a reduced
-model on CPU; on TPU the same driver takes the full config.
+Everything is constructed through the public API — ``ServeConfig`` composes
+the stack (arch, pairs, router, draft, speculation) and ``StreamServe``
+drives it online: requests arrive over logical time, stream tokens, and one
+can be cancelled or a worker killed mid-run.
 
   python -m repro.launch.serve --arch qwen3-1.7b --requests 12 --pairs 2
   python -m repro.launch.serve --arch mamba2-2.7b --router roundrobin \
-      --no-adaptive --fixed-depth 5       # ablation configuration
+      --spec-policy fixed --fixed-depth 5    # ablation configuration
+  python -m repro.launch.serve --no-reduced  # full-size model (TPU scale)
+  python -m repro.launch.serve --config serve.yaml   # flags override the file
 """
 from __future__ import annotations
 
@@ -14,104 +17,128 @@ import argparse
 import time
 from typing import Any, Dict
 
-import jax
 import numpy as np
+
+# flag -> ServeConfig field; these use default=SUPPRESS so a loaded --config
+# file is only overridden by flags the user actually typed
+_CONFIG_FLAGS = {
+    "arch": "arch",
+    "reduced": "reduced",
+    "pairs": "n_pairs",
+    "max_batch": "max_batch",
+    "max_len": "max_len",
+    "max_new": "max_new_tokens",
+    "router": "router",
+    "draft": "draft",
+    "spec_policy": "spec_policy",
+    "fixed_depth": "fixed_depth",
+    "seed": "seed",
+}
+
+# CLI defaults for a quick CPU run (applied only when no --config file)
+_CLI_BASE = dict(max_batch=4, max_len=192, max_new_tokens=24)
 
 
 def main(argv=None) -> Dict[str, Any]:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-1.7b")
+    S = argparse.SUPPRESS
+    ap.add_argument("--arch", default=S, help="model architecture (default qwen3-1.7b)")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--pairs", type=int, default=2)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=192)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--pairs", type=int, default=S, help="stream pairs (default 2)")
+    ap.add_argument("--max-batch", type=int, default=S, help="decode slots/pair (default 4)")
+    ap.add_argument("--max-len", type=int, default=S, help="per-slot KV tokens (default 192)")
+    ap.add_argument("--max-new", type=int, default=S, help="tokens per request (default 24)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--router", default="flowguard", choices=["flowguard", "roundrobin"])
-    ap.add_argument("--draft", default="ngram", choices=["ngram", "model", "none"])
-    ap.add_argument("--no-adaptive", action="store_true")
-    ap.add_argument("--fixed-depth", type=int, default=5)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction, default=S,
+                    help="reduced CPU model (--no-reduced for full size; default on)")
+    ap.add_argument("--router", default=S, help="router name (default flowguard)")
+    ap.add_argument("--draft", default=S, help="draft name (default ngram)")
+    ap.add_argument("--spec-policy", default=S,
+                    help="speculation policy name (default specustream)")
+    ap.add_argument("--fixed-depth", type=int, default=S)
+    ap.add_argument("--config", default=None,
+                    help="load a ServeConfig YAML (typed flags override it)")
+    ap.add_argument("--dump-config", default=None,
+                    help="write the resolved ServeConfig YAML and exit")
     ap.add_argument("--fail-worker", type=int, default=-1,
                     help="kill this stream pair mid-run (fault-tolerance demo)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cancel-one", action="store_true",
+                    help="cancel the last submitted request mid-run")
+    ap.add_argument("--seed", type=int, default=S, help="PRNG seed (default 0)")
     args = ap.parse_args(argv)
 
-    from repro.configs import get_config, reduced_config
-    from repro.core import EngineConfig, PipeServeEngine
-    from repro.core.flowguard import RoundRobinRouter
-    from repro.distributed.sharding import unzip_params
-    from repro.models import build_model
-    from repro.serving.request import Request, SamplingParams
+    # heavy imports (jax &c) only after argument parsing
+    from repro.api import ServeConfig, StreamServe
 
-    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    model = build_model(cfg)
-    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    if args.config:
+        base = ServeConfig.from_yaml(args.config)
+    else:
+        base = ServeConfig(**_CLI_BASE)
+    overrides = {
+        field: getattr(args, flag)
+        for flag, field in _CONFIG_FLAGS.items()
+        if hasattr(args, flag)
+    }
+    cfg = base.replace(**overrides) if overrides else base
+    if args.dump_config:
+        cfg.to_yaml(args.dump_config)
+        print(f"wrote {args.dump_config}")
+        return {"config": cfg}
 
-    draft_cfg = draft_params = None
-    if args.draft == "model":
-        import dataclasses
-
-        draft_cfg = dataclasses.replace(
-            reduced_config(args.arch), n_layers=2, name=cfg.name + "-draft"
-        )
-        draft_params, _ = unzip_params(build_model(draft_cfg).init(jax.random.PRNGKey(7)))
-
-    econf = EngineConfig(
-        max_batch=args.max_batch,
-        max_len=args.max_len,
-        draft=args.draft,
-        adaptive=not args.no_adaptive,
-        fixed_depth=args.fixed_depth,
-    )
-    router = RoundRobinRouter() if args.router == "roundrobin" else None
-    eng = PipeServeEngine(
-        cfg, params, n_pairs=args.pairs, econf=econf, router=router,
-        draft_cfg=draft_cfg, draft_params=draft_params,
-    )
-
-    rng = np.random.default_rng(args.seed)
+    serve = StreamServe(cfg)
+    rng = np.random.default_rng(cfg.seed)
     # shared prefix so the prefix cache (C_w signal) engages
-    shared = rng.integers(0, cfg.vocab_size, 8).tolist()
+    shared = rng.integers(0, serve.arch.vocab_size, 8).tolist()
     t0 = time.time()
-    for i in range(args.requests):
-        body = rng.integers(0, cfg.vocab_size, args.prompt_len - 8).tolist()
-        eng.submit(Request(prompt=shared + body,
-                           params=SamplingParams(max_new_tokens=args.max_new)))
-    # drive the engine; optionally kill a worker partway
+    handles = []
+    for _ in range(args.requests):
+        body = rng.integers(0, serve.arch.vocab_size, args.prompt_len - 8).tolist()
+        handles.append(serve.submit(shared + body))
+
+    # drive the engine; optionally kill a worker / cancel a request partway
     steps = 0
-    killed = False
-    while eng.scheduler.pending_total() > 0 or any(
-        p.active_slots() for p in eng.pairs if p.healthy
-    ):
-        eng.step()
+    killed = cancelled = False
+    while serve.pending > 0:
+        serve.step()
         steps += 1
         if args.fail_worker >= 0 and not killed and steps == 5:
-            n = eng.fail_worker(args.fail_worker)
+            n = serve.fail_worker(args.fail_worker)
             killed = True
             print(f"!! killed stream pair {args.fail_worker}; re-routed {n} queued requests")
+        if args.cancel_one and not cancelled and steps == 3:
+            handles[-1].cancel()
+            cancelled = True
+            print(f"!! cancelled {handles[-1].request_id} mid-run")
         if steps > 5000:
             raise RuntimeError("engine did not drain")
     wall = time.time() - t0
 
-    s = eng.monitor.summary()
-    done = [r for r in eng.monitor.completed]
+    s = serve.summary()
+    done = [h for h in handles if h.state.value == "finished"]
     print(f"\ncompleted {len(done)}/{args.requests} requests in {wall:.1f}s wall "
           f"({steps} engine steps)")
     print(f"logical latency mean={s['latency_mean']:.1f} p99={s['latency_p99']:.1f} "
           f"(engine ticks)")
-    for pair in eng.pairs:
-        m = eng.monitor.workers[pair.worker_id]
-        print(f"  pair {pair.worker_id}: healthy={pair.healthy} "
-              f"acceptance={pair.acceptance:.2f} cache_hit={m.cache_hit_rate:.2f} "
-              f"served={sum(1 for r in done if r.worker_id == pair.worker_id)}")
-    if args.no_adaptive:
-        print(f"speculation: FIXED depth {args.fixed_depth}")
+    for w in serve.worker_stats():
+        served = sum(1 for r in serve.monitor.completed if r.worker_id == w["worker_id"])
+        print(f"  pair {w['worker_id']}: healthy={w['healthy']} "
+              f"acceptance={w['acceptance']:.2f} cache_hit={w['cache_hit_rate']:.2f} "
+              f"served={served}")
+    if cfg.spec_policy == "specustream":
+        depths = [w["spec_depth"] for w in serve.worker_stats() if w["spec_depth"]]
+        if depths:
+            print(f"speculation: adaptive, last depths {depths}")
     else:
-        d = [p.spec.last_decision for p in eng.pairs if getattr(p.spec, 'last_decision', None)]
-        if d:
-            print(f"speculation: adaptive, last depths {[x.bucket_depth for x in d]}")
-    return {"summary": s, "engine": eng}
+        print(f"speculation: policy={cfg.spec_policy} depth={cfg.fixed_depth}")
+    if done:
+        slo = done[0].slo()
+
+        def fmt(v, spec):
+            return format(v, spec) if v is not None else "-"
+
+        print(f"sample SLO ({slo['request_id']}): ttft={fmt(slo['ttft'], '.0f')} "
+              f"tpot={fmt(slo['tpot'], '.2f')} latency={fmt(slo['latency'], '.0f')} ticks")
+    return {"summary": s, "serve": serve, "config": cfg}
 
 
 if __name__ == "__main__":

@@ -15,11 +15,10 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None) -> Dict[str, Any]:

@@ -19,14 +19,13 @@ Training loss is next-token CE over text tokens (enc-dec: over the target).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import P, constraint
+from repro.distributed.sharding import constraint
 from repro.models import transformer as tfm
 from repro.models.layers import embed_tokens, init_embedding, init_rms_norm, rms_norm, unembed
 

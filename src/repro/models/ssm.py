@@ -10,7 +10,7 @@ the same way via a short input-window buffer.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ layer is dense or MoE per ``cfg.moe_layer_mask()``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -22,7 +22,6 @@ Every op cost is ``max(compute_time, memory_time) + dispatch_overhead``
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.configs.base import ArchConfig
 

@@ -1,68 +1,22 @@
-"""Draft models for speculative decoding.
+"""Draft providers for speculative decoding.
 
-Two providers:
-
-* :class:`ModelDraft` — a small transformer (same vocab) built with
-  ``build_model``; the production path (EAGLE-class drafts map here on TPU;
-  see DESIGN.md §2).  Keeps its own KV cache with the same commit/rollback
-  protocol as the target.
 * :class:`NGramDraft` — suffix-matching n-gram proposer over the request's
   own history (prompt + generated).  Stateless on device, zero extra FLOPs;
   used by CPU tests and as the low-cost fallback lane.
+* :class:`EngineDraft` and subclasses — the per-pair provider protocol the
+  engine consumes; the small-transformer provider (``ModelLaneDraft``, the
+  EAGLE-class production path on TPU) lives in ``core/engine.py`` next to
+  ``ModelLane``, whose cache protocol it mirrors.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import register_draft
 from repro.configs.base import ArchConfig
-from repro.models import build_model
-from repro.serving.sampling import sample_probs, token_probs
-
-
-class ModelDraft:
-    """Small-transformer draft with its own cache (teacher-forced generate)."""
-
-    def __init__(self, cfg: ArchConfig, params, max_len: int):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = params
-        self.max_len = max_len
-        self.cache = None
-        self._decode = jax.jit(self.model.decode_step)
-        self._commit = jax.jit(self.model.commit_cache)
-
-    def prefill(self, batch) -> None:
-        _, self.cache = jax.jit(self.model.prefill, static_argnames=("max_len",))(
-            self.params, batch, max_len=self.max_len
-        )
-
-    def propose(
-        self, key, pending: jax.Array, k: int, temperature: float = 0.0
-    ) -> Tuple[jax.Array, jax.Array]:
-        """Generate k tokens after `pending` (B,).  Returns (tokens (B,k), q (B,k))."""
-        toks: List[jax.Array] = []
-        qs: List[jax.Array] = []
-        cur = pending[:, None]
-        old_len = self.cache["len"]
-        for i in range(k):
-            key, sk = jax.random.split(key)
-            logits, self.cache = self._decode(self.params, self.cache, cur)
-            t, q = sample_probs(sk, logits[:, -1], temperature)
-            toks.append(t)
-            qs.append(q)
-            cur = t[:, None]
-        # cache now holds pending + k-1 draft tokens; rollback happens in sync()
-        self._old_len = old_len
-        return jnp.stack(toks, 1), jnp.stack(qs, 1)
-
-    def sync(self, accept_idx: jax.Array) -> None:
-        """Roll the draft cache back to match the target's committed state."""
-        self.cache = self._commit(self.cache, self._old_len, accept_idx)
 
 
 @dataclasses.dataclass
@@ -101,3 +55,74 @@ class NGramDraft:
         toks = np.stack([np.array(self.propose_one(h, k), np.int32) for h in histories])
         qs = np.ones_like(toks, np.float32)
         return toks, qs
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing draft providers (resolved by name through repro.api.registry)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DraftContext:
+    """Everything a draft factory may need to build a provider for one
+    ``StreamPair``.  ``draft_cfg``/``draft_params`` are only set when the
+    caller supplies a separate small draft model."""
+
+    cfg: ArchConfig
+    econf: Any                      # repro.core.engine.EngineConfig
+    draft_cfg: Optional[ArchConfig] = None
+    draft_params: Any = None
+
+
+class EngineDraft:
+    """Per-pair speculative proposal provider.
+
+    The engine hands providers the owning ``StreamPair`` so they can read the
+    pair's slot state (``pending``, ``histories``) and consume its PRNG key —
+    the only mutable surface a provider may touch.
+
+    ``max_depth`` caps the SpecuStream/fixed depth decision; a provider that
+    cannot propose (``none``) advertises 0 and the pair falls back to plain
+    autoregressive decoding.
+    """
+
+    max_depth: int = 1 << 30
+
+    def on_admit(self, pair, batch, slot: int) -> None:
+        """A request was prefilled into ``slot``; mirror state if needed."""
+
+    def propose(self, pair, k: int) -> Tuple[Any, Any]:
+        """Return ``(tokens (B, k), q (B, k))`` draft proposals."""
+        raise NotImplementedError
+
+    def on_commit(self, pair, accept_idx, k: int) -> None:
+        """Target accepted ``accept_idx`` tokens per row; roll back if needed."""
+
+
+class NGramEngineDraft(EngineDraft):
+    """Zero-FLOP suffix-matching proposer over each slot's token history."""
+
+    def __init__(self, max_ngram: int, vocab_size: int):
+        self.ngram = NGramDraft(max_ngram, vocab_size)
+
+    def propose(self, pair, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        return self.ngram.propose(pair.histories, k)
+
+
+class NoDraft(EngineDraft):
+    """Disables speculation: forces plain autoregressive decode steps."""
+
+    max_depth = 0
+
+    def propose(self, pair, k: int):
+        raise RuntimeError("NoDraft cannot propose; depth must be 0")
+
+
+@register_draft("ngram")
+def _make_ngram(ctx: DraftContext) -> NGramEngineDraft:
+    return NGramEngineDraft(ctx.econf.max_ngram, ctx.cfg.vocab_size)
+
+
+@register_draft("none")
+def _make_none(ctx: DraftContext) -> NoDraft:
+    return NoDraft()

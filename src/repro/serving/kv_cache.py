@@ -12,7 +12,7 @@ truth for M_w (memory utilisation) and C_w (prefix reuse).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass

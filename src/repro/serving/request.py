@@ -16,6 +16,7 @@ class RequestState(enum.Enum):
     DECODING = "decoding"
     FINISHED = "finished"
     FAILED = "failed"
+    CANCELLED = "cancelled"
 
 
 @dataclasses.dataclass
@@ -33,7 +34,9 @@ class Request:
     prompt: Sequence[int]
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     request_id: str = dataclasses.field(default_factory=lambda: f"req-{next(_ids)}")
-    arrival_time: float = 0.0
+    # None = "not yet arrived"; the scheduler stamps submission time.  An
+    # explicit value (including 0.0) is preserved verbatim.
+    arrival_time: Optional[float] = None
     # runtime state ----------------------------------------------------------
     state: RequestState = RequestState.QUEUED
     worker_id: int = -1

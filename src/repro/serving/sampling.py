@@ -7,8 +7,7 @@ speculative verification.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -141,11 +141,17 @@ class ServeSimulator:
         self.cost = CostModel(cfg, hw=hw, lane_chips=self.config.lane_chips, mfu=mfu)
         self.now = 0.0
         self.monitor = PerformanceMonitor(self.config.n_workers, clock=lambda: self.now)
-        router = {
+        local_routers = {
             "flowguard": lambda: FlowGuard(self.config.flowguard_config),
             "roundrobin": RoundRobinRouter,
             "random": lambda: _RandomRouter(self.config.seed),
-        }[self.config.router]()
+        }
+        if self.config.router in local_routers:
+            router = local_routers[self.config.router]()
+        else:  # plugin routers registered through repro.api work here too
+            from repro.api.registry import resolve_router
+
+            router = resolve_router(self.config.router)
         self.scheduler = StreamScheduler(self.config.n_workers, router, self.monitor)
         self.workers = [_Worker(i, self) for i in range(self.config.n_workers)]
         self.rng = np.random.default_rng(self.config.seed)

@@ -134,7 +134,7 @@ class CheckpointManager:
                 entry = manifest["leaves"][f"{group}/{key}"]
                 arr = np.load(path / entry["file"])
                 if str(arr.dtype) != entry["dtype"]:
-                    import ml_dtypes  # cast widened leaves back (bfloat16 &c)
+                    import ml_dtypes  # noqa: F401  (registers bfloat16 &c with numpy)
 
                     arr = arr.astype(np.dtype(entry["dtype"]))
                 vals.append(arr)

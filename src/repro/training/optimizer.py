@@ -13,7 +13,7 @@ Optimizer state inherits each parameter's logical sharding axes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,9 @@ class AdamWState(NamedTuple):
 
 def adamw(cfg: OptConfig):
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return AdamWState(jnp.zeros((), jnp.int32), jax.tree.map(zeros, params), jax.tree.map(zeros, params))
 
     def update(grads, state: AdamWState, params):

@@ -7,13 +7,11 @@ beyond-paper large-scale feature — see distributed/compression.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
+
 from repro.models.model import Model
 from repro.training.optimizer import OptConfig, apply_updates, make_optimizer
 
@@ -61,7 +59,7 @@ def make_train_step(
 
 def opt_state_axes(opt_name: str, params_axes: Any, params_shapes: Any):
     """Logical-axes pytree matching the optimizer state structure."""
-    from repro.training.optimizer import AdafloorState, AdamWState, _factored
+    from repro.training.optimizer import AdafloorState, AdamWState
 
     scalar = ()
     if opt_name == "adamw":

@@ -1,0 +1,183 @@
+"""Tests for the public serving API: ServeConfig, registries, StreamServe."""
+import jax
+import pytest
+
+from repro.api import (
+    DRAFTS,
+    ROUTERS,
+    SPEC_POLICIES,
+    ServeConfig,
+    StreamServe,
+    register_router,
+    resolve_router,
+    resolve_spec_policy,
+)
+from repro.core.flowguard import FlowGuard, FlowGuardConfig, RoundRobinRouter
+from repro.core.specustream import FixedSpeculation, SpecuStream
+from repro.distributed.sharding import unzip_params
+from repro.models import build_model
+from repro.serving.request import RequestState, SamplingParams
+
+
+# --------------------------------------------------------------- ServeConfig
+def test_serveconfig_dict_round_trip():
+    cfg = ServeConfig.reduced_smoke(router="roundrobin", fixed_depth=3)
+    d = cfg.to_dict()
+    assert d["router"] == "roundrobin"
+    assert ServeConfig.from_dict(d) == cfg
+
+
+def test_serveconfig_yaml_round_trip(tmp_path):
+    cfg = ServeConfig.reduced_smoke(draft="none", spec_policy="none")
+    path = tmp_path / "serve.yaml"
+    cfg.to_yaml(str(path))
+    assert ServeConfig.from_yaml(str(path)) == cfg
+    # and from a literal YAML string
+    assert ServeConfig.from_yaml(cfg.to_yaml()) == cfg
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        {"arch": "not-a-model"},
+        {"router": "not-a-router"},
+        {"draft": "not-a-draft"},
+        {"spec_policy": "not-a-policy"},
+        {"n_pairs": 0},
+        {"max_batch": 0},
+        {"temperature": -0.5},
+        {"max_new_tokens": 512, "max_len": 96},
+    ],
+)
+def test_serveconfig_validation_errors(bad):
+    with pytest.raises(ValueError):
+        ServeConfig(**bad)
+
+
+def test_serveconfig_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown ServeConfig keys"):
+        ServeConfig.from_dict({"archh": "qwen3-1.7b"})
+
+
+def test_serveconfig_replace_revalidates():
+    cfg = ServeConfig.reduced_smoke()
+    with pytest.raises(ValueError):
+        cfg.replace(router="bogus")
+
+
+def test_serveconfig_builds_engine_and_sim_configs():
+    cfg = ServeConfig.reduced_smoke(spec_policy="fixed", fixed_depth=4)
+    econf = cfg.build_engine_config()
+    assert econf.resolved_spec_policy() == "fixed" and econf.fixed_depth == 4
+    sim = cfg.to_sim_config()
+    assert sim.speculative and not sim.adaptive and sim.fixed_depth == 4
+    assert cfg.build_arch_config().n_layers == 2
+
+
+# ----------------------------------------------------------------- registries
+def test_registry_builtins_resolve():
+    assert set(ROUTERS.names()) >= {"flowguard", "roundrobin"}
+    assert set(DRAFTS.names()) >= {"ngram", "model", "none"}
+    assert set(SPEC_POLICIES.names()) >= {"specustream", "fixed", "none"}
+    assert isinstance(resolve_router("flowguard"), FlowGuard)
+    assert isinstance(resolve_router("roundrobin"), RoundRobinRouter)
+    assert isinstance(resolve_spec_policy("specustream"), SpecuStream)
+    fixed = resolve_spec_policy("fixed", fixed_depth=7)
+    assert isinstance(fixed, FixedSpeculation) and fixed.depth == 7
+    assert resolve_spec_policy("none").depth == 0
+
+
+def test_registry_unknown_name_errors():
+    with pytest.raises(KeyError, match="unknown router 'warp'"):
+        resolve_router("warp")
+    with pytest.raises(KeyError, match="registered:"):
+        DRAFTS.get("eagle3")
+
+
+def test_registry_rejects_duplicate_and_plugin_roundtrip():
+    @register_router("test-only-router")
+    def _make(config=None):
+        return RoundRobinRouter()
+
+    try:
+        assert "test-only-router" in ROUTERS
+        assert isinstance(resolve_router("test-only-router"), RoundRobinRouter)
+        with pytest.raises(ValueError, match="already registered"):
+            register_router("test-only-router", lambda config=None: object())
+        # a ServeConfig naming the plugin validates like a built-in
+        ServeConfig.reduced_smoke(router="test-only-router")
+    finally:
+        ROUTERS._entries.pop("test-only-router", None)
+
+
+def test_router_config_passes_through():
+    fg = resolve_router("flowguard", config=FlowGuardConfig(q_max=4))
+    assert fg.config.q_max == 4
+    fg = resolve_router("flowguard", config={"q_max": 8})
+    assert fg.config.q_max == 8
+
+
+# ------------------------------------------------------------ StreamServe e2e
+@pytest.fixture(scope="module")
+def serve():
+    cfg = ServeConfig.reduced_smoke("qwen3-1.7b", n_pairs=2, max_batch=2)
+    model = build_model(cfg.build_arch_config())
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    return StreamServe(cfg, params=params)
+
+
+def test_submit_stream_result_and_slo(serve):
+    h = serve.submit(list(range(1, 11)), SamplingParams(max_new_tokens=6),
+                     slo_ttft=50.0)
+    toks = list(h.stream())
+    assert len(toks) == 6 and h.done and h.state == RequestState.FINISHED
+    assert h.result() == toks  # result() after stream() is a stable replay
+    slo = h.slo()
+    assert slo["n_tokens"] == 6 and slo["ttft"] >= 0 and slo["latency"] > 0
+    assert slo["ttft_ok"] is True
+
+
+def test_mid_run_arrival_streams_to_completion(serve):
+    """A request submitted while others are mid-decode must stream tokens
+    and finish — the online-arrival property the batch loop lacked."""
+    early = [serve.submit(list(range(2, 12))) for _ in range(3)]
+    for _ in range(2):
+        serve.step()
+    assert any(len(h.request.output_tokens) > 0 for h in early)
+    late = serve.submit(list(range(40, 50)), SamplingParams(max_new_tokens=5))
+    assert late.request.output_tokens == []  # genuinely arrived mid-run
+    streamed = list(late.stream())
+    assert len(streamed) == 5 and late.done
+    for h in early:
+        h.result()
+    assert all(h.done for h in early)
+
+
+def test_cancel_queued_and_inflight(serve):
+    # saturate both pairs (max_batch=2 * 2 pairs) so the 5th request queues
+    block = [serve.submit(list(range(3, 13))) for _ in range(4)]
+    queued = serve.submit(list(range(3, 13)))
+    assert queued.cancel()
+    assert queued.state == RequestState.CANCELLED
+    assert list(queued.stream()) == []
+    inflight = block[0]
+    serve.step()
+    if not inflight.done:
+        assert inflight.cancel()
+        assert inflight.state == RequestState.CANCELLED
+    assert serve.cancel("req-does-not-exist") is False
+    for h in block[1:]:
+        h.result()
+
+
+def test_submit_validates_prompt_budget(serve):
+    with pytest.raises(ValueError, match="non-empty"):
+        serve.submit([])
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        serve.submit(list(range(90)), SamplingParams(max_new_tokens=90))
+
+
+def test_worker_stats_shape(serve):
+    stats = serve.worker_stats()
+    assert [w["worker_id"] for w in stats] == [0, 1]
+    assert all(0.0 <= w["acceptance"] <= 1.0 for w in stats)

@@ -1,21 +1,18 @@
 """Sharding rules, collectives (shard_map on a CPU sub-mesh), compression,
 checkpointing and fault-tolerance substrate tests."""
-import dataclasses
 import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as PS
+from jax.sharding import PartitionSpec as PS
 
 from repro.distributed.compression import CompressionConfig, GradientCompressor
 from repro.distributed.fault_tolerance import (
     HealthTracker,
     StragglerDetector,
-    TrainSupervisor,
 )
-from repro.distributed.sharding import DEFAULT_RULES, P, logical_to_spec, unzip_params
+from repro.distributed.sharding import logical_to_spec
 from repro.training.checkpoint import CheckpointManager
 
 

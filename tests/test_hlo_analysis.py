@@ -6,10 +6,9 @@ whose true costs are computable by hand.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import HloAnalyzer, analyze
+from repro.launch.hlo_analysis import analyze
 
 
 def _hlo(fn, *args):
@@ -62,6 +61,10 @@ def test_bytes_order_of_magnitude():
     assert 0.5 * want <= c.bytes <= 4 * want, (c.bytes, want)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="subprocess script targets the jax.shard_map API (jax >= 0.6)",
+)
 def test_collective_detection():
     """psum under shard_map shows up as all-reduce bytes."""
     import subprocess, sys, textwrap, os, json

@@ -1,6 +1,5 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracles over
 shape/dtype/masking sweeps (the per-kernel allclose deliverable)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

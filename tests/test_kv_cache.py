@@ -1,6 +1,6 @@
 """Paged KV-cache / prefix-cache tests, incl. hypothesis invariants."""
-import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.serving.kv_cache import BlockPool, KVCacheManager, chain_hashes

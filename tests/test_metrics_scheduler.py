@@ -1,5 +1,6 @@
 """PerformanceMonitor (Eq 17-19) and StreamScheduler behaviour tests."""
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.flowguard import FlowGuard

@@ -4,9 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.sampling import sample, token_probs
+from repro.serving.sampling import token_probs
 from repro.serving.speculative import verify_reference, verify_tokens
 
 RNG = np.random.default_rng(7)

@@ -1,6 +1,9 @@
 """SpecuStream unit + hypothesis property tests (paper Eq 8-16, Alg 4)."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.specustream import (
