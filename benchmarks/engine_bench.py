@@ -1,0 +1,186 @@
+"""Engine microbenchmark — the hot-path perf trajectory (BENCH_engine.json).
+
+Drives ``PipeServeEngine`` (real JAX execution) over the paper's four
+workload suites (alpaca / gsm8k / humaneval / sum) plus the mixed
+multi-tenant trace, and records per trace:
+
+* ``tokens_per_s``        — generated tokens / serve-phase wall time
+* ``p50_step_ms``/``p99_step_ms`` — engine-step latency distribution
+* ``admission_p50_ms``    — submit -> first-token wall latency
+* ``retraces_steady``     — jit cache-size growth during serving (must be 0
+  after ``engine.warmup()``: the shape-bucketing contract)
+
+A second, bucketing-off engine (``prefill_buckets=False``,
+``verify_buckets=None`` — the pre-bucketing hot path that re-traces XLA per
+distinct prompt length and speculation depth) replays the mixed trace for
+``speedup_mixed``.
+
+  PYTHONPATH=src python benchmarks/engine_bench.py               # standard
+  PYTHONPATH=src python benchmarks/engine_bench.py --reduced     # CI smoke
+  PYTHONPATH=src python benchmarks/engine_bench.py --fail-on-retrace
+
+Output: BENCH_engine.json at the repo root (override with --out).  Every PR
+appends a point to this trajectory; CI fails the smoke job on any
+steady-state retrace.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+SUITES = ("alpaca", "gsm8k", "humaneval", "sum")
+
+
+def _percentile(vals: List[float], p: float) -> float:
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    return vals[min(int(p / 100.0 * len(vals)), len(vals) - 1)]
+
+
+def _clip_prompts(reqs, max_prompt: int):
+    for sim in reqs:
+        sim.request.prompt = list(sim.request.prompt)[:max_prompt]
+    return [sim.request for sim in reqs]
+
+
+def serve_trace(engine, reqs, max_steps: int = 20_000) -> Dict[str, float]:
+    """Submit a whole trace, drive the engine dry, measure wall-clock."""
+    cache_before = engine.jit_cache_total()
+    t_submit = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    step_ms: List[float] = []
+    first_tok_ms: Dict[str, float] = {}
+    for _ in range(max_steps):
+        if engine.scheduler.pending_total() == 0 and all(
+            not p.active_slots() for p in engine.pairs if p.healthy
+        ):
+            break
+        t0 = time.perf_counter()
+        engine.step()
+        step_ms.append((time.perf_counter() - t0) * 1e3)
+        now_ms = (time.perf_counter() - t_submit) * 1e3
+        for r in reqs:
+            if r.output_tokens and r.request_id not in first_tok_ms:
+                first_tok_ms[r.request_id] = now_ms
+    wall = time.perf_counter() - t_submit
+    generated = sum(len(r.output_tokens) for r in reqs)
+    admits = list(first_tok_ms.values())
+    return {
+        "requests": len(reqs),
+        "generated_tokens": generated,
+        "serve_wall_s": round(wall, 3),
+        "tokens_per_s": round(generated / max(wall, 1e-9), 2),
+        "steps": len(step_ms),
+        "p50_step_ms": round(_percentile(step_ms, 50), 2),
+        "p99_step_ms": round(_percentile(step_ms, 99), 2),
+        "admission_p50_ms": round(_percentile(admits, 50), 2),
+        "admission_p99_ms": round(_percentile(admits, 99), 2),
+        "retraces_steady": engine.jit_cache_total() - cache_before,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reduced", action="store_true", help="CI-sized smoke run")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_engine.json"))
+    ap.add_argument("--fail-on-retrace", action="store_true",
+                    help="exit 1 if any bucketed run retraced in steady state")
+    ap.add_argument("--skip-legacy", action="store_true",
+                    help="skip the bucketing-off baseline replay")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core.engine import EngineConfig, PipeServeEngine
+    from repro.data.workloads import sample_mixed, sample_requests
+    from repro.distributed.sharding import unzip_params
+    from repro.models import build_model
+
+    n_suite = 4 if args.reduced else 12
+    n_mixed = 2 if args.reduced else 5          # per suite -> 8 / 20 requests
+    max_new = 8 if args.reduced else 16
+    max_len = 192
+    max_prompt = max_len - max_new - 8
+
+    cfg = dataclasses.replace(reduced_config("qwen3-1.7b"), n_layers=2)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    base = dict(max_batch=4, max_len=max_len, kv_blocks=4096, kv_block_size=16)
+
+    def trace(name: str):
+        if name == "mixed":
+            sims = sample_mixed(n_mixed, vocab_size=cfg.vocab_size)
+            for s in sims:
+                s.request.params.max_new_tokens = max_new
+        else:
+            sims = sample_requests(
+                name, n_suite, vocab_size=cfg.vocab_size, max_new_override=max_new
+            )
+        return _clip_prompts(sims, max_prompt)
+
+    # ---- bucketed engine: warm once, then serve every suite ----------------
+    print(f"engine_bench: building bucketed engine ({cfg.name}, reduced model)")
+    engine = PipeServeEngine(cfg, params, n_pairs=1, econf=EngineConfig(**base))
+    t0 = time.perf_counter()
+    n_programs = engine.warmup(max_prompt_len=max_prompt)
+    warmup_s = time.perf_counter() - t0
+    print(f"  warmup: {n_programs} programs in {warmup_s:.1f}s")
+
+    results: Dict[str, Dict[str, float]] = {}
+    for name in SUITES + ("mixed",):
+        results[name] = serve_trace(engine, trace(name))
+        r = results[name]
+        print(f"  {name:10s} {r['tokens_per_s']:8.1f} tok/s  "
+              f"p50 {r['p50_step_ms']:6.1f}ms  p99 {r['p99_step_ms']:6.1f}ms  "
+              f"retraces {r['retraces_steady']}")
+
+    # ---- bucketing-off baseline (pre-PR hot path) on the mixed trace -------
+    legacy = None
+    if not args.skip_legacy:
+        print("engine_bench: replaying mixed trace on the bucketing-off baseline")
+        legacy_engine = PipeServeEngine(
+            cfg, params, n_pairs=1,
+            econf=EngineConfig(prefill_buckets=False, verify_buckets=None, **base),
+        )
+        legacy = serve_trace(legacy_engine, trace("mixed"))
+        print(f"  legacy     {legacy['tokens_per_s']:8.1f} tok/s  "
+              f"retraces {legacy['retraces_steady']}")
+
+    retraces = max(r["retraces_steady"] for r in results.values())
+    out = {
+        "bench": "engine",
+        "mode": "reduced" if args.reduced else "standard",
+        "arch": cfg.name,
+        "config": {"n_layers": cfg.n_layers, "max_new_tokens": max_new, **base},
+        "warmup": {"programs": n_programs, "wall_s": round(warmup_s, 2)},
+        "workloads": results,
+        "legacy_mixed": legacy,
+        "speedup_mixed": (
+            round(results["mixed"]["tokens_per_s"] / legacy["tokens_per_s"], 2)
+            if legacy else None
+        ),
+        "steady_state_retraces": retraces,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"engine_bench: wrote {args.out}")
+    if out["speedup_mixed"] is not None:
+        print(f"  mixed-trace speedup vs pre-bucketing path: {out['speedup_mixed']}x")
+    if args.fail_on_retrace and retraces > 0:
+        print(f"FAIL: {retraces} steady-state retraces (expected 0)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,11 +17,11 @@ see :mod:`repro.api.registry` — so plugins validate exactly like built-ins.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 from repro.api.registry import DRAFTS, ROUTERS, SPEC_POLICIES
 from repro.core.flowguard import FlowGuardConfig
-from repro.core.specustream import SpecuStreamConfig
+from repro.core.specustream import VERIFY_BUCKETS, SpecuStreamConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +47,11 @@ class ServeConfig:
     spec_policy: str = "specustream"
     fixed_depth: int = 5
     spec: Optional[SpecuStreamConfig] = None
+    # ---- hot-path shape bucketing (zero steady-state retraces) -------------
+    prefill_buckets: bool = True     # pow2 prompt-length buckets + fused admits
+    prefill_bucket_min: int = 16     # smallest prompt-length bucket
+    admit_batch: int = 4             # max admissions fused into one prefill call
+    verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS  # traced depths
     # ---- workload defaults ------------------------------------------------
     max_new_tokens: int = 64         # default SamplingParams.max_new_tokens
     seed: int = 0
@@ -70,10 +75,20 @@ class ServeConfig:
             ("n_pairs", 1), ("max_batch", 1), ("max_len", 8), ("kv_blocks", 1),
             ("kv_block_size", 1), ("max_ngram", 1), ("draft_layers", 1),
             ("fixed_depth", 0), ("max_new_tokens", 1),
+            ("prefill_bucket_min", 1), ("admit_batch", 1),
         ]:
             v = getattr(self, field)
             if not isinstance(v, int) or v < lo:
                 raise ValueError(f"{field} must be an int >= {lo} (got {v!r})")
+        if self.verify_buckets is not None:
+            vb = tuple(self.verify_buckets)  # normalise (YAML round-trips lists)
+            if not vb or any(not isinstance(b, int) or b < 1 for b in vb) or \
+                    list(vb) != sorted(set(vb)):
+                raise ValueError(
+                    f"verify_buckets must be strictly increasing ints >= 1 "
+                    f"(got {self.verify_buckets!r})"
+                )
+            object.__setattr__(self, "verify_buckets", vb)
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
         if self.n_layers is not None and self.n_layers < 1:
@@ -203,6 +218,10 @@ class ServeConfig:
             router=self.router,
             router_config=self.flowguard,
             spec_policy=self.spec_policy,
+            prefill_buckets=self.prefill_buckets,
+            prefill_bucket_min=self.prefill_bucket_min,
+            admit_batch=self.admit_batch,
+            verify_buckets=self.verify_buckets,
         )
 
     def to_sim_config(self, **overrides):

@@ -7,6 +7,28 @@ both lanes share the device and the transfer is the jitted ``insert`` below).
 The decode lane runs continuous batching over ``max_batch`` slots with
 SpecuStream-governed speculative flows.
 
+Hot-path shape discipline (zero steady-state retraces):
+
+* **Bucketed prefill** — prompts are right-padded to power-of-two length
+  buckets and queued admissions are fused into one prefill call per tick
+  (batch dimension bucketed too), so XLA compiles O(#buckets) prefill
+  programs instead of one per distinct prompt length.
+* **Depth-bucketed verify** — SpecuStream may pick any depth d; the draft is
+  padded to the smallest ``verify_buckets`` member >= d and the padding is
+  masked inside ``verify_tokens``, so adaptive depth never changes a traced
+  shape.
+* **Donated device-resident state** — the batched decode cache is donated
+  through decode/commit/insert (in-place KV update, no per-step copy);
+  ``pending`` next-tokens live on device; ``admit`` and ``decode_iteration``
+  each perform a single bulk ``jax.device_get`` for host bookkeeping.
+  Donation invariant: callers must rebind ``lane.cache`` and never hold a
+  reference into a donated cache (``commit`` recovers the pre-step length
+  *inside* the jit for exactly this reason).
+
+``PipeServeEngine.warmup()`` pre-compiles every bucket combination;
+``jit_cache_sizes()`` exposes compiled-trace counts so benchmarks and tests
+can assert the steady state stays retrace-free.
+
 The engine is single-controller and fully deterministic given the request
 trace — which is what makes the control plane property-testable.
 """
@@ -14,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +51,7 @@ from repro.api.registry import (
 from repro.configs.base import ArchConfig
 from repro.core.metrics import PerformanceMonitor, RequestRecord
 from repro.core.scheduler import StreamScheduler
-from repro.core.specustream import SpecDecision
+from repro.core.specustream import VERIFY_BUCKETS, SpecDecision, pad_to_bucket
 from repro.models import build_model
 from repro.serving.draft import DraftContext, EngineDraft
 from repro.serving.kv_cache import KVCacheManager
@@ -38,23 +60,44 @@ from repro.serving.sampling import sample, sample_probs
 from repro.serving.speculative import verify_tokens
 
 
-def _tree_insert(big, small, slot: jax.Array):
-    """Insert a batch-1 cache into slot ``slot`` of a batched cache.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _tree_insert_rows(big, small, slots: jax.Array):
+    """Insert rows of a prefill cache into decode slots (donated in place).
 
-    Batched cache leaves are (n_blocks, B, ...) under "blocks" and (B,) at the
-    top level; prefill outputs have B = 1.
+    Row ``r`` of ``small`` lands in slot ``slots[r]`` of ``big``; out-of-range
+    slot ids (padded admission rows) are dropped.  Batched cache leaves are
+    (n_blocks, B, ...) under "blocks" and (B,) at the top level.  Jitted once
+    at module level so N lanes (and draft mirrors) share compiled inserts per
+    shape instead of re-jitting per ``ModelLane``.
     """
 
     def ins(b, s):
         if b.ndim >= 2 and s.ndim == b.ndim:  # (n_blocks, B, ...) leaves
-            return jax.lax.dynamic_update_index_in_dim(b, s[:, 0], slot, 1)
-        return jax.lax.dynamic_update_index_in_dim(b, s[0], slot, 0)  # (B,) leaves
+            return b.at[:, slots].set(s.astype(b.dtype), mode="drop")
+        return b.at[slots].set(s.astype(b.dtype), mode="drop")  # (B,) leaves
 
     return jax.tree.map(ins, big, small)
 
 
+def _pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
+    """Power-of-two shape buckets from ``lo`` up to (and including) ``hi``."""
+    out: List[int] = []
+    b = max(lo, 1)
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
+
+
 class ModelLane:
-    """A model + per-slot batched decode cache + jitted step helpers."""
+    """A model + per-slot batched decode cache + jitted step helpers.
+
+    The cache is donated through every jitted step: ``decode``/``commit``/
+    ``insert_rows`` consume the previous cache buffers and update them in
+    place (no full-KV copy per step).  Callers must treat ``self.cache`` as
+    the only live handle.
+    """
 
     def __init__(self, cfg: ArchConfig, params, max_batch: int, max_len: int):
         self.cfg = cfg
@@ -63,25 +106,35 @@ class ModelLane:
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = self.model.init_cache(max_batch, max_len)
-        self._decode = jax.jit(self.model.decode_step)
-        self._commit = jax.jit(self.model.commit_cache)
-        self._insert = jax.jit(_tree_insert)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._commit = jax.jit(self._commit_fn, donate_argnums=(0,))
         self._prefill = jax.jit(
             functools.partial(self.model.prefill, max_len=max_len)
         )
 
+    def _commit_fn(self, cache, n_new, accept_idx):
+        # the pre-step length is recovered INSIDE the jit so callers never
+        # hold a reference into a donated cache (it would be a deleted buffer)
+        old_len = cache["len"] - n_new
+        return self.model.commit_cache(cache, old_len, accept_idx)
+
     def prefill(self, batch: Dict[str, Any]):
         return self._prefill(self.params, batch)
 
-    def insert(self, slot: int, small_cache) -> None:
-        self.cache = self._insert(self.cache, small_cache, jnp.int32(slot))
+    def insert_rows(self, slots: jax.Array, small_cache) -> None:
+        """Transfer prefill rows into decode slots (row r -> slots[r])."""
+        self.cache = _tree_insert_rows(self.cache, small_cache, slots)
 
     def decode(self, tokens: jax.Array):
         logits, self.cache = self._decode(self.params, self.cache, tokens)
         return logits
 
-    def commit(self, old_len: jax.Array, accept_idx: jax.Array) -> None:
-        self.cache = self._commit(self.cache, old_len, accept_idx)
+    def commit(self, n_new: int, accept_idx: jax.Array) -> None:
+        """Roll back the last ``n_new`` ingested tokens to ``accept_idx``."""
+        self.cache = self._commit(self.cache, n_new, accept_idx)
+
+    def reset_cache(self) -> None:
+        self.cache = self.model.init_cache(self.max_batch, self.max_len)
 
     @property
     def lengths(self) -> jax.Array:
@@ -104,6 +157,12 @@ class EngineConfig:
     router: str = "flowguard"        # any name in repro.api.ROUTERS
     router_config: Any = None
     spec_policy: Optional[str] = None  # any name in repro.api.SPEC_POLICIES
+    # hot-path shape bucketing (disable both for the seed-identical
+    # retrace-per-shape path, e.g. as a benchmark baseline)
+    prefill_buckets: bool = True     # pow2 prompt-length buckets + fused admits
+    prefill_bucket_min: int = 16     # smallest prompt-length bucket
+    admit_batch: int = 4             # max admissions fused into one prefill call
+    verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS
 
     def resolved_spec_policy(self) -> str:
         if self.spec_policy is not None:
@@ -138,9 +197,20 @@ class StreamPair:
             econf.draft,
             DraftContext(cfg=cfg, econf=econf, draft_cfg=draft_cfg, draft_params=draft_params),
         )
+        # length bucketing needs right-padding to be invisible, which holds
+        # for causal attention but not for SSM state / enc-dec / frontends
+        self._bucketed = (
+            econf.prefill_buckets
+            and not cfg.is_encdec
+            and cfg.frontend is None
+            and all(kind == "attn" for kind in cfg.layer_kinds())
+        )
+        self._len_buckets = _pow2_buckets(econf.prefill_bucket_min, econf.max_len)
+        self._admit_buckets = _pow2_buckets(1, max(econf.admit_batch, 1))
         # slot state -----------------------------------------------------------
         self.slot_req: List[Optional[Request]] = [None] * econf.max_batch
-        self.pending = np.zeros((econf.max_batch,), np.int64)
+        # device-resident pending next-token per slot (sampled, not ingested)
+        self.pending = jnp.zeros((econf.max_batch,), jnp.int32)
         self.histories: List[List[int]] = [[] for _ in range(econf.max_batch)]
         self.acceptance = 0.7  # optimistic prior
         self.key = jax.random.PRNGKey(worker_id)
@@ -157,39 +227,70 @@ class StreamPair:
     def load(self) -> float:
         return len(self.active_slots()) / self.econf.max_batch
 
+    def admit_cap(self) -> int:
+        """How many admissions may fuse into one prefill call."""
+        return max(self.econf.admit_batch, 1) if self._bucketed else 1
+
+    @staticmethod
+    def _bucket(n: int, buckets: Tuple[int, ...]) -> int:
+        for b in buckets:
+            if b >= n:
+                return b
+        return n  # oversize (prompt > max_len): correctness over shape reuse
+
     # ---------------------------------------------------------------- prefill
-    def admit(self, req: Request, now: float) -> bool:
-        """Prefill one request and transfer its KV into a free decode slot."""
-        slots = self.free_slots()
-        if not slots:
-            return False
+    def reserve_kv(self, req: Request) -> bool:
+        """Allocate KV blocks for a request ahead of its (batched) prefill."""
         alloc = self.kv.allocate_sequence(
             req.request_id, list(req.prompt), extra_tokens=req.params.max_new_tokens
         )
         if alloc is None:
             return False  # KV pool exhausted — stays queued
         req.cache_hit_tokens = alloc.shared_blocks * self.kv.pool.block_size
-        slot = slots[0]
-        req.state = RequestState.PREFILLING
-        req.t_prefill_start = now
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        batch = {"tokens": prompt}
+        return True
+
+    def admit(self, reqs: List[Request], now: float) -> None:
+        """Prefill a batch of KV-reserved requests in ONE bucketed call and
+        transfer their KV into free decode slots (one bulk device_get)."""
+        slots = self.free_slots()[: len(reqs)]
+        assert len(slots) == len(reqs), "admit() requires a free slot per request"
+        for req in reqs:
+            req.state = RequestState.PREFILLING
+            req.t_prefill_start = now
+        if self._bucketed:
+            S = self._bucket(max(len(r.prompt) for r in reqs), self._len_buckets)
+            Bb = self._bucket(len(reqs), self._admit_buckets)
+            tokens = np.zeros((Bb, S), np.int32)
+            lengths = np.ones((Bb,), np.int32)  # pad rows: 1 garbage token
+            for i, req in enumerate(reqs):
+                tokens[i, : len(req.prompt)] = req.prompt
+                lengths[i] = len(req.prompt)
+            batch = {"tokens": jnp.asarray(tokens), "lengths": jnp.asarray(lengths)}
+        else:
+            Bb = 1  # legacy path: exact shapes, one admission per call
+            batch = {"tokens": jnp.asarray(list(reqs[0].prompt), jnp.int32)[None, :]}
+        slot_ids = np.full((Bb,), self.econf.max_batch, np.int32)  # OOB = dropped
+        slot_ids[: len(reqs)] = slots
+        slots_dev = jnp.asarray(slot_ids)
         last_logits, small_cache = self.lane.prefill(batch)
         # --- KV transfer (NIXL analogue): insert into the decode lane --------
-        req.state = RequestState.TRANSFERRING
-        self.lane.insert(slot, small_cache)
-        self.draft.on_admit(self, batch, slot)
+        for req in reqs:
+            req.state = RequestState.TRANSFERRING
+        self.lane.insert_rows(slots_dev, small_cache)
+        self.draft.on_admit(self, batch, slots_dev)
         self.key, sk = jax.random.split(self.key)
-        first = int(sample(sk, last_logits, self.econf.temperature)[0])
-        req.state = RequestState.DECODING
-        req.t_prefill_end = now
-        req.t_first_token = now
-        req.output_tokens.append(first)
-        req.token_times.append(now)
-        self.slot_req[slot] = req
-        self.pending[slot] = first
-        self.histories[slot] = list(req.prompt) + [first]
-        return True
+        first = sample(sk, last_logits, self.econf.temperature).astype(jnp.int32)
+        self.pending = self.pending.at[slots_dev].set(first, mode="drop")
+        first_h = np.asarray(jax.device_get(first))  # the ONE admit round-trip
+        for i, req in enumerate(reqs):
+            tok = int(first_h[i])
+            req.state = RequestState.DECODING
+            req.t_prefill_end = now
+            req.t_first_token = now
+            req.output_tokens.append(tok)
+            req.token_times.append(now)
+            self.slot_req[slots[i]] = req
+            self.histories[slots[i]] = list(req.prompt) + [tok]
 
     # ----------------------------------------------------------------- decode
     def decode_iteration(self, now: float) -> int:
@@ -207,46 +308,56 @@ class StreamPair:
         k = min(decision.bucket_depth, self.draft.max_depth)
         active_mask = np.zeros((B,), bool)
         active_mask[active] = True
+        active_dev = jnp.asarray(active_mask)
 
         if k == 0:  # plain autoregressive step
-            tokens = jnp.asarray(self.pending, jnp.int32)[:, None]
-            logits = self.lane.decode(tokens)
-            self.lane.commit(self.lane.lengths - 1, jnp.zeros((B,), jnp.int32))
+            logits = self.lane.decode(self.pending[:, None])
+            self.lane.commit(1, jnp.zeros((B,), jnp.int32))
             self.key, sk = jax.random.split(self.key)
-            nxt = np.asarray(sample(sk, logits[:, 0], self.econf.temperature))
+            nxt = sample(sk, logits[:, 0], self.econf.temperature).astype(jnp.int32)
+            self.pending = jnp.where(active_dev, nxt, self.pending)
+            nxt_h = np.asarray(jax.device_get(nxt))  # the ONE decode round-trip
             emitted = 0
             for s in active:
-                emitted += self._emit(s, [int(nxt[s])], now)
+                emitted += self._emit(s, [int(nxt_h[s])], now)
             return emitted
 
-        # ---- draft proposal --------------------------------------------------
+        # ---- draft proposal (real depth k, padded to a shape bucket) --------
+        vb = self.econf.verify_buckets
+        if vb:
+            k = min(k, vb[-1])
+        k_pad = pad_to_bucket(k, vb)
         draft_toks, draft_q = self.draft.propose(self, k)
         draft_toks = jnp.asarray(draft_toks, jnp.int32)
         draft_q = jnp.asarray(draft_q, jnp.float32)
+        if k_pad > k:
+            draft_toks = jnp.pad(draft_toks, ((0, 0), (0, k_pad - k)), mode="edge")
+            draft_q = jnp.pad(draft_q, ((0, 0), (0, k_pad - k)), constant_values=1.0)
+        depth = jnp.full((B,), k, jnp.int32) if vb else None
 
-        # ---- target verify step (T = k+1 tokens) ----------------------------
-        verify_in = jnp.concatenate(
-            [jnp.asarray(self.pending, jnp.int32)[:, None], draft_toks], axis=1
-        )
-        old_len = self.lane.lengths
-        logits = self.lane.decode(verify_in)  # (B, k+1, V)
+        # ---- target verify step (T = k_pad+1 tokens, one traced shape/bucket)
+        verify_in = jnp.concatenate([self.pending[:, None], draft_toks], axis=1)
+        logits = self.lane.decode(verify_in)  # (B, k_pad+1, V)
         self.key, sk = jax.random.split(self.key)
         res = verify_tokens(
             sk,
             draft_toks,
             draft_q,
             logits,
-            active=jnp.asarray(active_mask),
+            active=active_dev,
             temperature=self.econf.temperature,
+            depth=depth,
         )
-        n_acc = np.asarray(res.n_accepted)
-        nxt = np.asarray(res.next_token)
-        self.lane.commit(old_len, res.accept_idx)
+        self.lane.commit(k_pad + 1, res.accept_idx)
         self.draft.on_commit(self, res.accept_idx, k)
+        self.pending = jnp.where(active_dev, res.next_token.astype(jnp.int32), self.pending)
+        # the ONE decode round-trip: everything host bookkeeping needs at once
+        n_acc, nxt, draft_np = map(
+            np.asarray, jax.device_get((res.n_accepted, res.next_token, draft_toks))
+        )
         accepted_frac = float(n_acc[active].mean()) / max(k, 1)
         self.acceptance = 0.8 * self.acceptance + 0.2 * accepted_frac
 
-        draft_np = np.asarray(draft_toks)
         emitted = 0
         for s in active:
             toks = [int(t) for t in draft_np[s, : int(n_acc[s])]] + [int(nxt[s])]
@@ -254,22 +365,26 @@ class StreamPair:
         return emitted
 
     def _emit(self, slot: int, tokens: List[int], now: float) -> int:
+        """Host-side bookkeeping for one slot's freshly decoded tokens (the
+        device values were already fetched in one bulk transfer upstream)."""
         req = self.slot_req[slot]
+        granted = self.kv.extend_up_to(req.request_id, len(tokens))
         count = 0
-        for t in tokens:
+        for t in tokens[:granted]:
             if req.is_done():
                 break
             req.output_tokens.append(t)
             req.token_times.append(now)
             self.histories[slot].append(t)
             count += 1
-        self.pending[slot] = tokens[-1] if tokens else self.pending[slot]
-        self.kv.extend_sequence(req.request_id, count)
-        if req.is_done():
-            self._finish(slot, now)
+        # block pool ran dry mid-decode: truncate and finish gracefully
+        # instead of over-committing accounting against unallocated blocks
+        evicted = granted < len(tokens) and not req.is_done()
+        if req.is_done() or evicted:
+            self._finish(slot, now, kv_evicted=evicted)
         return count
 
-    def _finish(self, slot: int, now: float) -> None:
+    def _finish(self, slot: int, now: float, kv_evicted: bool = False) -> None:
         req = self.slot_req[slot]
         req.state = RequestState.FINISHED
         req.t_end = now
@@ -283,10 +398,60 @@ class StreamPair:
                 generated=len(req.output_tokens),
                 token_times=list(req.token_times),
                 worker_id=self.worker_id,
+                kv_evicted=kv_evicted,
             )
         )
         self.slot_req[slot] = None
         self.histories[slot] = []
+
+    # ----------------------------------------------------------------- warmup
+    def warmup(self, max_prompt_len: Optional[int] = None) -> int:
+        """Pre-compile every steady-state shape bucket (prefill batches,
+        verify depths, the plain step) ahead of traffic, then reset the lane.
+        Returns the number of distinct programs exercised."""
+        econf = self.econf
+        B = econf.max_batch
+        key = jax.random.PRNGKey(0)  # throwaway: must not perturb self.key
+        n = 0
+        prefill_batches: List[Dict[str, Any]] = []
+        if self._bucketed:
+            hi = self._bucket(
+                min(max_prompt_len or econf.max_len, econf.max_len), self._len_buckets
+            )
+            drop_all = econf.max_batch  # every warmup insert row is dropped
+            for S in (b for b in self._len_buckets if b <= hi):
+                for Bb in self._admit_buckets:
+                    batch = {
+                        "tokens": jnp.zeros((Bb, S), jnp.int32),
+                        "lengths": jnp.full((Bb,), S, jnp.int32),
+                    }
+                    logits, small = self.lane.prefill(batch)
+                    self.lane.insert_rows(jnp.full((Bb,), drop_all, jnp.int32), small)
+                    sample(key, logits, econf.temperature)
+                    prefill_batches.append(batch)
+                    n += 1
+        active_dev = jnp.zeros((B,), bool)
+        for d in econf.verify_buckets or ():
+            logits = self.lane.decode(jnp.zeros((B, d + 1), jnp.int32))
+            verify_tokens(
+                key,
+                jnp.zeros((B, d), jnp.int32),
+                jnp.ones((B, d), jnp.float32),
+                logits,
+                active=active_dev,
+                temperature=econf.temperature,
+                depth=jnp.full((B,), d, jnp.int32),
+            )
+            self.lane.commit(d + 1, jnp.zeros((B,), jnp.int32))
+            n += 1
+        logits = self.lane.decode(jnp.zeros((B, 1), jnp.int32))  # plain step
+        self.lane.commit(1, jnp.zeros((B,), jnp.int32))
+        sample(key, logits[:, 0], econf.temperature)
+        n += 1
+        self.draft.warmup(self, prefill_batches)
+        self.lane.reset_cache()
+        self.pending = jnp.zeros((B,), jnp.int32)
+        return n
 
     # ---------------------------------------------------------------- metrics
     def publish_metrics(self, queue_depth: int) -> None:
@@ -309,16 +474,14 @@ class ModelLaneDraft(EngineDraft):
                  temperature: float):
         self.lane = ModelLane(cfg, params, max_batch, max_len)
         self.temperature = temperature
-        self._old_len = None
 
-    def on_admit(self, pair, batch, slot: int) -> None:
+    def on_admit(self, pair, batch, slots) -> None:
         _, small_cache = self.lane.prefill(batch)
-        self.lane.insert(slot, small_cache)
+        self.lane.insert_rows(slots, small_cache)
 
     def propose(self, pair, k: int):
-        self._old_len = self.lane.lengths
         toks, qs = [], []
-        cur = jnp.asarray(pair.pending, jnp.int32)[:, None]
+        cur = pair.pending[:, None]
         for _ in range(k):
             pair.key, sk = jax.random.split(pair.key)
             logits = self.lane.decode(cur)
@@ -330,8 +493,22 @@ class ModelLaneDraft(EngineDraft):
         return jnp.stack(toks, 1), jnp.stack(qs, 1)
 
     def on_commit(self, pair, accept_idx, k: int) -> None:
-        # draft ingested k tokens [pending, d_1..d_{k-1}]
-        self.lane.commit(self._old_len, jnp.minimum(accept_idx, k - 1))
+        # draft ingested k tokens [pending, d_1..d_{k-1}] during propose; the
+        # pre-propose length is recovered inside the jit (donation-safe)
+        self.lane.commit(k, jnp.minimum(accept_idx, k - 1))
+
+    def warmup(self, pair, prefill_batches) -> None:
+        key = jax.random.PRNGKey(0)
+        B = self.lane.max_batch
+        drop_all = jnp.full((B,), B, jnp.int32)
+        for batch in prefill_batches:
+            Bb = batch["tokens"].shape[0]
+            _, small = self.lane.prefill(batch)
+            self.lane.insert_rows(drop_all[:Bb], small)
+        logits = self.lane.decode(jnp.zeros((B, 1), jnp.int32))
+        sample_probs(key, logits[:, -1], self.temperature)
+        self.lane.commit(1, jnp.zeros((B,), jnp.int32))
+        self.lane.reset_cache()
 
 
 @register_draft("model")
@@ -369,7 +546,6 @@ class PipeServeEngine:
             StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
             for i in range(n_pairs)
         ]
-        self._now = 0.0
 
     def _clock(self) -> float:
         return self._now
@@ -427,13 +603,25 @@ class PipeServeEngine:
             if not pair.healthy:
                 continue
             wid = pair.worker_id
-            # stall-free admission: fill free slots from the queue
-            while pair.free_slots():
-                req = self.scheduler.next_for_prefill(wid)
-                if req is None:
-                    break
-                if not pair.admit(req, self._now):
-                    self.scheduler.prefill_queues[wid].appendleft(req)
+            # stall-free admission: fill free slots from the queue, fusing up
+            # to admit_cap() reserved requests into one bucketed prefill call
+            while True:
+                free = pair.free_slots()
+                cap = min(len(free), pair.admit_cap())
+                batch: List[Request] = []
+                blocked = False
+                while len(batch) < cap:
+                    req = self.scheduler.next_for_prefill(wid)
+                    if req is None:
+                        break
+                    if not pair.reserve_kv(req):
+                        self.scheduler.prefill_queues[wid].appendleft(req)
+                        blocked = True
+                        break
+                    batch.append(req)
+                if batch:
+                    pair.admit(batch, self._now)
+                if blocked or not batch:
                     break
             n = pair.decode_iteration(self._now)
             emitted += n
@@ -449,3 +637,37 @@ class PipeServeEngine:
                 return
             self.step()
         raise RuntimeError("engine did not drain within max_steps")
+
+    # ------------------------------------------------------------ warmup/perf
+    def warmup(self, max_prompt_len: Optional[int] = None) -> int:
+        """Pre-compile every shape bucket on every healthy pair so serving
+        triggers zero retraces (``max_prompt_len`` caps the length buckets)."""
+        return sum(
+            pair.warmup(max_prompt_len) for pair in self.pairs if pair.healthy
+        )
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-trace counts of every hot-path callable — the retrace
+        observability consumed by engine_bench and the regression tests."""
+        from repro.serving import sampling, speculative
+
+        sizes = {
+            "tree_insert": _tree_insert_rows._cache_size(),
+            "verify_tokens": speculative.verify_tokens._cache_size(),
+            "sample": sampling.sample._cache_size(),
+            "sample_probs": sampling.sample_probs._cache_size(),
+        }
+        for pair in self.pairs:
+            lanes = [("", pair.lane)]
+            draft_lane = getattr(pair.draft, "lane", None)
+            if isinstance(draft_lane, ModelLane):
+                lanes.append(("draft_", draft_lane))
+            for prefix, lane in lanes:
+                tag = f"pair{pair.worker_id}.{prefix}"
+                sizes[tag + "prefill"] = lane._prefill._cache_size()
+                sizes[tag + "decode"] = lane._decode._cache_size()
+                sizes[tag + "commit"] = lane._commit._cache_size()
+        return sizes
+
+    def jit_cache_total(self) -> int:
+        return sum(self.jit_cache_sizes().values())

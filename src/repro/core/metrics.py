@@ -44,6 +44,9 @@ class RequestRecord:
     generated: int = 0
     token_times: List[float] = dataclasses.field(default_factory=list)
     worker_id: int = -1
+    # the sequence was truncated mid-decode because the KV block pool ran dry
+    # (finished gracefully rather than over-committing accounting)
+    kv_evicted: bool = False
 
     @property
     def latency(self) -> float:

@@ -26,6 +26,25 @@ from repro.api.registry import register_spec_policy
 
 DEPTH_BUCKETS: Tuple[int, ...] = (2, 3, 4, 5, 6, 8, 10, 12, 16, 20)
 
+# Traced-shape buckets for the speculative VERIFY step.  The policy above may
+# pick any depth d; the engine pads the draft up to the smallest member >= d
+# and masks the padding inside verify_tokens, so the decode lane compiles at
+# most len(VERIFY_BUCKETS) verify shapes no matter how d moves step to step.
+VERIFY_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def pad_to_bucket(k: int, buckets: Optional[Tuple[int, ...]]) -> int:
+    """Smallest shape bucket >= k (k itself when bucketing is off).
+
+    ``k`` above the largest bucket is the caller's responsibility to clamp;
+    here it maps to the largest bucket."""
+    if not buckets:
+        return k
+    for b in buckets:
+        if b >= k:
+            return b
+    return buckets[-1]
+
 
 @dataclasses.dataclass(frozen=True)
 class SpecuStreamConfig:

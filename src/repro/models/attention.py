@@ -159,6 +159,39 @@ def write_cache(
     return jax.vmap(upd)(cache_k, cache_v, kv_pos, k_new, v_new, slots, pos)
 
 
+def prefill_fill_cache(
+    k_new: jax.Array,
+    v_new: jax.Array,
+    lengths: jax.Array,
+    cap: int,
+    dtype,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Build a decode cache from right-padded (bucketed) prefill K/V.
+
+    ``k_new``/``v_new``: (B, S, K, D) over the padded sequence; ``lengths``
+    (B,) gives each row's real prompt length.  For cache slot ``j`` the winner
+    is the LAST real position ``p < lengths`` with ``p % cap == j`` (ring
+    semantics, gather-based so per-row variable lengths never produce
+    conflicting scatter writes).  Padded positions never reach the cache:
+    their slots keep ``kv_pos = -1``, so the positional decode mask makes
+    bucketed prefill bit-invisible to every later decode step.
+    """
+    B, S = k_new.shape[:2]
+    j = jnp.arange(cap)[None, :]                       # (1, cap)
+    wrap = (lengths[:, None] - 1 - j) // cap           # (B, cap); < 0 => empty
+    pos_win = j + cap * jnp.maximum(wrap, 0)
+    valid = wrap >= 0
+    idx = jnp.clip(pos_win, 0, S - 1)
+    gk = jnp.take_along_axis(k_new, idx[..., None, None], axis=1)
+    gv = jnp.take_along_axis(v_new, idx[..., None, None], axis=1)
+    m = valid[..., None, None]
+    return (
+        jnp.where(m, gk, 0).astype(dtype),
+        jnp.where(m, gv, 0).astype(dtype),
+        jnp.where(valid, pos_win, -1).astype(jnp.int32),
+    )
+
+
 def _cp_mesh():
     """Mesh for context-parallel decode, if one is active with a model axis."""
     from repro.distributed.sharding import _current_mesh

@@ -161,23 +161,44 @@ def build_model(cfg: ArchConfig) -> Model:
 
     # ---------------------------------------------------------------- prefill
     def prefill(params, batch, max_len: int):
-        """Run the prompt; returns (last-token logits (B, V), cache)."""
+        """Run the prompt; returns (last-token logits (B, V), cache).
+
+        Optional ``batch["lengths"]`` (B,) int32 enables bucketed prefill:
+        ``tokens`` is right-padded to a shape bucket, only the first
+        ``lengths[b]`` tokens of each row are real.  Last-token logits are
+        gathered at ``lengths - 1`` and ``cache["len"]`` records the real
+        per-row lengths, so decode continues exactly as if the prompt had
+        been run unpadded (attention-only architectures).
+        """
+        lengths = batch.get("lengths")
         cross_mem = None
         mem_len = None
         if cfg.is_encdec:
+            if lengths is not None:
+                raise NotImplementedError("bucketed prefill: enc-dec unsupported")
             enc_out = _encode(params, batch["frames"])
             mem_len = jnp.full((enc_out.shape[0],), enc_out.shape[1], jnp.int32)
             cross_mem = (enc_out, mem_len)
         x, n_prefix = _embed_inputs(params, batch)
+        if lengths is not None and n_prefix:
+            raise NotImplementedError("bucketed prefill: frontend prefix unsupported")
         B, S = x.shape[0], x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         cache0 = init_cache(B, max_len)
         x, aux, new_blocks = tfm.scan_prefill(
-            params["blocks"], cfg, x, positions, cache0["blocks"], cross_mem=cross_mem
+            params["blocks"], cfg, x, positions, cache0["blocks"],
+            cross_mem=cross_mem, lengths=lengths,
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = unembed(params["embedding"], x[:, -1:], cfg.tie_embeddings, cfg.vocab_size)[:, 0]
-        cache = {"blocks": new_blocks, "len": jnp.full((B,), S, jnp.int32)}
+        if lengths is None:
+            last = x[:, -1:]
+            seq_len = jnp.full((B,), S, jnp.int32)
+        else:
+            seq_len = lengths.astype(jnp.int32)
+            idx = jnp.clip(seq_len - 1, 0, S - 1)
+            last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = unembed(params["embedding"], last, cfg.tie_embeddings, cfg.vocab_size)[:, 0]
+        cache = {"blocks": new_blocks, "len": seq_len}
         if cfg.is_encdec:
             cache["mem_len"] = mem_len
         return logits.astype(jnp.float32), cache

@@ -137,8 +137,18 @@ def block_prefill(
     cache: Dict[str, Any],
     *,
     cross_mem: Optional[Tuple[jax.Array, jax.Array]] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict, Dict[str, Any]]:
-    """Prefill pass seeding the decode cache (incl. per-layer cross memories)."""
+    """Prefill pass seeding the decode cache (incl. per-layer cross memories).
+
+    ``lengths`` (B,) enables bucketed prefill: ``x`` is right-padded to a
+    shape bucket and only the first ``lengths[b]`` positions of row ``b`` are
+    real.  Causal attention already makes real positions independent of the
+    trailing padding; the cache is seeded through the gather-based
+    ``prefill_fill_cache`` so padded slots stay invisible (``kv_pos = -1``).
+    Attention-only stacks only — SSM recurrent state cannot ignore a padded
+    suffix, so callers gate bucketing on the architecture.
+    """
     S = x.shape[1]
     new_cache: Dict[str, Any] = {}
     for i in range(cfg.scan_block):
@@ -150,7 +160,9 @@ def block_prefill(
             c = cache[str(i)]
             cap = c["k"].shape[1]
             start = jnp.zeros((x.shape[0],), jnp.int32)
-            if cap >= S:
+            if lengths is not None:
+                ck, cv, cp = attn.prefill_fill_cache(k, v, lengths, cap, c["k"].dtype)
+            elif cap >= S:
                 ck, cv, cp = attn.write_cache(c["k"], c["v"], c["kv_pos"], k, v, start)
             else:  # ring buffer smaller than the prompt: keep the tail
                 tail = S - cap
@@ -160,6 +172,11 @@ def block_prefill(
                 )
             nc = {"k": ck, "v": cv, "kv_pos": cp}
         else:
+            if lengths is not None:
+                raise NotImplementedError(
+                    "bucketed (length-padded) prefill requires an attention-only "
+                    "stack; SSM state would absorb the padding"
+                )
             out, nc = ssm.mamba_prefill(layer["mamba"], cfg, h)
             x = x + out
         if cross_mem is not None:
@@ -260,11 +277,14 @@ def scan_full(stacked, cfg: ArchConfig, x, positions, *, causal=True, cross_mem=
     return x, aux
 
 
-def scan_prefill(stacked, cfg: ArchConfig, x, positions, cache, *, cross_mem=None):
+def scan_prefill(stacked, cfg: ArchConfig, x, positions, cache, *, cross_mem=None,
+                 lengths=None):
     def body(carry, inp):
         x, aux = carry
         bp, bc = inp
-        x, aux, nc = block_prefill(bp, cfg, x, positions, aux, bc, cross_mem=cross_mem)
+        x, aux, nc = block_prefill(
+            bp, cfg, x, positions, aux, bc, cross_mem=cross_mem, lengths=lengths
+        )
         return (x, aux), nc
 
     (x, aux), new_cache = jax.lax.scan(body, (x, dict(AUX0)), (stacked, cache))

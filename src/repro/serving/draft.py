@@ -88,15 +88,26 @@ class EngineDraft:
 
     max_depth: int = 1 << 30
 
-    def on_admit(self, pair, batch, slot: int) -> None:
-        """A request was prefilled into ``slot``; mirror state if needed."""
+    def on_admit(self, pair, batch, slots) -> None:
+        """A batch of requests was prefilled; mirror state if needed.
+
+        ``batch`` is the (possibly bucket-padded) prefill batch and ``slots``
+        an int32 array mapping batch row -> decode slot, with padded rows
+        pointing out of range (a drop-mode scatter ignores them)."""
 
     def propose(self, pair, k: int) -> Tuple[Any, Any]:
         """Return ``(tokens (B, k), q (B, k))`` draft proposals."""
         raise NotImplementedError
 
     def on_commit(self, pair, accept_idx, k: int) -> None:
-        """Target accepted ``accept_idx`` tokens per row; roll back if needed."""
+        """Target accepted ``accept_idx`` tokens per row; roll back if needed.
+
+        ``k`` is the REAL proposed depth (the verify step may have run at a
+        padded bucket depth; the padding never reaches providers)."""
+
+    def warmup(self, pair, prefill_batches) -> None:
+        """Pre-compile any device functions the provider owns (one dummy
+        ``batch`` per prefill shape bucket the engine will use)."""
 
 
 class NGramEngineDraft(EngineDraft):

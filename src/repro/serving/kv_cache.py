@@ -138,16 +138,35 @@ class KVCacheManager:
         return alloc
 
     def extend_sequence(self, request_id: str, n_new_tokens: int) -> bool:
-        """Grow a sequence's allocation for generated tokens."""
+        """Grow a sequence's allocation for generated tokens.  All-or-nothing:
+        on pool exhaustion nothing is accounted (blocks grabbed so far stay
+        attached to the allocation and are reused by a later extend/free)."""
+        granted = self.extend_up_to(request_id, n_new_tokens)
+        if granted == n_new_tokens:
+            return True
+        self.seqs[request_id].n_tokens -= granted  # roll back the partial grant
+        return False
+
+    def extend_up_to(self, request_id: str, n_new_tokens: int) -> int:
+        """Grow a sequence's allocation by UP TO ``n_new_tokens`` tokens.
+
+        Returns how many tokens were actually granted — short on block-pool
+        exhaustion, in which case the caller must truncate the sequence (the
+        engine finishes it with ``kv_evicted``) instead of over-committing
+        accounting against blocks that were never allocated.
+        """
         alloc = self.seqs[request_id]
-        need = self.pool.blocks_for_tokens(alloc.n_tokens + n_new_tokens)
-        while len(alloc.block_ids) < need:
+        bs = self.pool.block_size
+        capacity = len(alloc.block_ids) * bs - alloc.n_tokens
+        while capacity < n_new_tokens:
             bid = self.pool.allocate()
             if bid is None:
-                return False
+                break
             alloc.block_ids.append(bid)
-        alloc.n_tokens += n_new_tokens
-        return True
+            capacity += bs
+        granted = min(max(capacity, 0), n_new_tokens)
+        alloc.n_tokens += granted
+        return granted
 
     def free_sequence(self, request_id: str) -> None:
         alloc = self.seqs.pop(request_id, None)

@@ -3,10 +3,13 @@
 All functions take fp32 logits (B, V) and are jit-safe with static
 hyper-parameters.  ``sample_probs`` returns both the token and the
 probability the sampler assigned to it — the draft probability q(x) needed by
-speculative verification.
+speculative verification.  ``sample``/``sample_probs`` are jitted at module
+level (hyper-parameters static), so every engine lane shares one compiled
+sampler per logits shape and retraces are observable via ``_cache_size()``.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -49,6 +52,7 @@ def token_probs(logits: jax.Array, temperature: float, top_k: int, top_p: float)
     return jax.nn.softmax(adjust_logits(logits, temperature, top_k, top_p), axis=-1)
 
 
+@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
 def sample(
     key: jax.Array,
     logits: jax.Array,
@@ -62,6 +66,7 @@ def sample(
     return jax.random.categorical(key, adjust_logits(logits, temperature, top_k, top_p), axis=-1)
 
 
+@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
 def sample_probs(
     key: jax.Array,
     logits: jax.Array,

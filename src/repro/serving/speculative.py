@@ -45,8 +45,16 @@ def verify_tokens(
     temperature: float = 0.0,
     top_k: int = 0,
     top_p: float = 1.0,
+    depth: Optional[jax.Array] = None,  # (B,) int32 — real depth <= k (rest is pad)
 ) -> VerifyResult:
-    """Batched Leviathan accept/reject with per-row masking."""
+    """Batched Leviathan accept/reject with per-row masking.
+
+    ``depth`` decouples the *real* speculation depth from the *traced* one:
+    ``draft_tokens`` may be padded from depth d up to a shape bucket k, and
+    positions >= depth are never accepted (their q=1 pad entries are masked),
+    while the bonus distribution is read at index ``depth`` — so an adaptive
+    policy can change d every step without changing any compiled shape.
+    """
     B, k = draft_tokens.shape
     V = target_logits.shape[-1]
     flat = target_logits.reshape(B * (k + 1), V)
@@ -61,14 +69,19 @@ def verify_tokens(
     u = jax.random.uniform(key_u, (B, k))
     ratio = p_draft / jnp.maximum(draft_probs, 1e-30)
     ok = u < jnp.minimum(ratio, 1.0)  # (B, k)
+    if depth is None:
+        depth = jnp.full((B,), k, jnp.int32)
+    else:
+        depth = jnp.broadcast_to(jnp.asarray(depth, jnp.int32), (B,))
+        ok = ok & (jnp.arange(k)[None, :] < depth[:, None])  # pad never accepted
     # n_accepted = length of the accepted PREFIX
     acc_prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1)
     n_acc = acc_prefix.sum(axis=-1)  # (B,)
 
     # distribution for the next pending token:
-    #   all accepted  -> L_k
+    #   all accepted  -> L_depth (bonus)
     #   rejected at i -> norm(max(p_i − q_onehot·q, 0))  [residual]
-    rej_idx = jnp.minimum(n_acc, k - 1)  # first rejected position (if any)
+    rej_idx = jnp.clip(jnp.minimum(n_acc, depth - 1), 0, k - 1)  # first rejection
     p_rej = jnp.take_along_axis(p_full, rej_idx[:, None, None], axis=1)[:, 0]  # (B, V)
     # draft distribution at the rejected position: we only know q(d_i) for the
     # sampled token; the residual max(p−q,0) needs the full q.  For greedy
@@ -81,8 +94,8 @@ def verify_tokens(
     residual = jnp.maximum(p_rej - q_vec, 0.0)
     residual = residual / jnp.maximum(residual.sum(-1, keepdims=True), 1e-30)
 
-    bonus_p = p_full[:, k]  # (B, V)
-    all_ok = n_acc == k
+    bonus_p = jnp.take_along_axis(p_full, depth[:, None, None], axis=1)[:, 0]  # (B, V)
+    all_ok = n_acc == depth
     next_p = jnp.where(all_ok[:, None], bonus_p, residual)
     if temperature <= 0.0:
         nxt = jnp.argmax(next_p, axis=-1)

@@ -1,0 +1,179 @@
+"""Bucketed hot-path correctness: padded prefill / depth-padded verify must
+be token-for-token invisible, steady state must be retrace-free, and KV pool
+exhaustion mid-decode must finish victims gracefully."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import EngineConfig, PipeServeEngine
+from repro.distributed.sharding import unzip_params
+from repro.models import build_model
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.speculative import verify_tokens
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced_config("qwen3-1.7b")
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    model = build_model(cfg)
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+def _mixed_requests(cfg, n, seed, max_new=8, lo=6, hi=50):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(lo, hi))).tolist(),
+            params=SamplingParams(max_new_tokens=max_new),
+        )
+        for _ in range(n)
+    ]
+
+
+def test_bucketed_greedy_outputs_bit_identical(small_model):
+    """Padded-bucket prefill + depth-padded verify + batched admission must
+    emit EXACTLY the tokens of the unbucketed seed path (greedy)."""
+    cfg, params = small_model
+
+    def run(**kw):
+        eng = PipeServeEngine(
+            cfg, params, n_pairs=1,
+            econf=EngineConfig(max_batch=2, max_len=96, **kw),
+        )
+        reqs = _mixed_requests(cfg, 5, seed=0)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(max_steps=800)
+        return [tuple(r.output_tokens) for r in reqs]
+
+    bucketed = run()
+    legacy = run(prefill_buckets=False, verify_buckets=None)
+    assert bucketed == legacy
+
+
+def test_depth_padded_verify_matches_unpadded():
+    """verify_tokens with draft padded k=3 -> 8 and depth=3 must reproduce
+    the unpadded k=3 result, and padding must never be accepted."""
+    B, k, k_pad, V = 4, 3, 8, 64
+    key = jax.random.PRNGKey(7)
+    kl, kd = jax.random.split(key)
+    logits = jax.random.normal(kl, (B, k_pad + 1, V), jnp.float32)
+    draft = jax.random.randint(kd, (B, k_pad), 0, V)
+    q = jnp.ones((B, k_pad), jnp.float32)
+
+    ref = verify_tokens(key, draft[:, :k], q[:, :k], logits[:, : k + 1],
+                        temperature=0.0)
+    pad = verify_tokens(key, draft, q, logits, temperature=0.0,
+                        depth=jnp.full((B,), k, jnp.int32))
+    assert (np.asarray(pad.n_accepted) <= k).all()
+    np.testing.assert_array_equal(np.asarray(ref.n_accepted), np.asarray(pad.n_accepted))
+    np.testing.assert_array_equal(np.asarray(ref.next_token), np.asarray(pad.next_token))
+    np.testing.assert_array_equal(np.asarray(ref.accept_idx), np.asarray(pad.accept_idx))
+
+
+def test_depth_padded_bonus_reads_depth_position():
+    """All-accepted at depth d: the bonus must come from logits L_d, not from
+    the padded tail L_k."""
+    B, k, k_pad, V = 2, 2, 4, 16
+    logits = jnp.full((B, k_pad + 1, V), -10.0)
+    # make position 0/1 accept drafts 3 and 5; L_2 (bonus) peaks at 9;
+    # padded L_3/L_4 peak elsewhere (would leak if depth were ignored)
+    logits = logits.at[:, 0, 3].set(10.0)
+    logits = logits.at[:, 1, 5].set(10.0)
+    logits = logits.at[:, 2, 9].set(10.0)
+    logits = logits.at[:, 3, 1].set(10.0)
+    logits = logits.at[:, 4, 2].set(10.0)
+    draft = jnp.tile(jnp.array([3, 5, 0, 0], jnp.int32), (B, 1))
+    q = jnp.ones((B, k_pad), jnp.float32)
+    res = verify_tokens(jax.random.PRNGKey(0), draft, q, logits,
+                        temperature=0.0, depth=jnp.full((B,), k, jnp.int32))
+    assert (np.asarray(res.n_accepted) == k).all()
+    assert (np.asarray(res.next_token) == 9).all()
+
+
+def test_retrace_count_stops_growing_after_warmup(small_model):
+    """Serve 20 mixed-length requests after warmup(): the jit caches of every
+    hot-path callable must not grow (zero steady-state retraces)."""
+    cfg, params = small_model
+    eng = PipeServeEngine(cfg, params, n_pairs=1,
+                          econf=EngineConfig(max_batch=3, max_len=96))
+    eng.warmup(max_prompt_len=60)
+    before = eng.jit_cache_sizes()
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        plen = int(rng.integers(6, 60))
+        eng.submit(Request(
+            prompt=rng.integers(0, cfg.vocab_size, plen).tolist(),
+            params=SamplingParams(max_new_tokens=int(rng.integers(4, 12))),
+        ))
+    eng.run_until_done(max_steps=2000)
+    assert len(eng.monitor.completed) == 20
+    after = eng.jit_cache_sizes()
+    grew = {n: (before[n], after[n]) for n in after if after[n] != before.get(n)}
+    assert not grew, f"steady-state retraces: {grew}"
+
+
+def test_kv_exhaustion_finishes_victim_gracefully(small_model):
+    """Block-pool exhaustion mid-decode truncates the victim and finishes it
+    with kv_evicted instead of silently over-committing accounting."""
+    cfg, params = small_model
+    eng = PipeServeEngine(
+        cfg, params, n_pairs=1,
+        econf=EngineConfig(max_batch=1, max_len=96, kv_blocks=24, kv_block_size=4),
+    )
+    rng = np.random.default_rng(4)
+    req = Request(prompt=rng.integers(0, cfg.vocab_size, 10).tolist(),
+                  params=SamplingParams(max_new_tokens=4))
+    eng.submit(req)
+    eng.step()  # admits + reserves blocks for prompt + 4 tokens
+    assert req.state == RequestState.DECODING
+    pair = eng.pairs[0]
+    # drain the rest of the pool, then grow the victim's budget past its
+    # reservation so decode must extend into an empty pool
+    i = 0
+    while pair.kv.allocate_sequence(f"hog{i}", [1000 + 4 * i + j for j in range(4)],
+                                    extra_tokens=0) is not None:
+        i += 1
+    req.params.max_new_tokens = 60
+    eng.run_until_done(max_steps=300)
+    assert req.state == RequestState.FINISHED
+    assert len(req.output_tokens) < 60  # truncated
+    rec = eng.monitor.completed[-1]
+    assert rec.request_id == req.request_id and rec.kv_evicted
+    assert req.request_id not in pair.kv.seqs  # blocks released
+    for b in pair.kv.pool.blocks:
+        assert b.ref_count >= 0
+
+
+def test_extend_up_to_partial_grant():
+    kv = KVCacheManager(4, block_size=4)
+    kv.allocate_sequence("r", list(range(10)), extra_tokens=0)  # 3 blocks
+    assert kv.extend_up_to("r", 2) == 2                         # slack in block 3
+    assert kv.extend_up_to("r", 9) == 4                         # 1 block left
+    assert kv.extend_up_to("r", 1) == 0                         # pool dry
+    assert kv.seqs["r"].n_tokens == 16
+    assert not kv.extend_sequence("r", 3)
+
+
+def test_serveconfig_bucket_knobs_round_trip():
+    from repro.api import ServeConfig
+
+    cfg = ServeConfig.reduced_smoke(verify_buckets=[1, 2, 4])  # list normalises
+    assert cfg.verify_buckets == (1, 2, 4)
+    again = ServeConfig.from_yaml(cfg.to_yaml())
+    assert again.verify_buckets == (1, 2, 4)
+    assert again.build_engine_config().verify_buckets == (1, 2, 4)
+    with pytest.raises(ValueError):
+        ServeConfig.reduced_smoke(verify_buckets=(4, 2))
+    with pytest.raises(ValueError):
+        ServeConfig.reduced_smoke(admit_batch=0)
+    legacy = ServeConfig.reduced_smoke(prefill_buckets=False, verify_buckets=None)
+    econf = legacy.build_engine_config()
+    assert econf.prefill_buckets is False and econf.verify_buckets is None
