@@ -15,6 +15,12 @@ A second, bucketing-off engine (``prefill_buckets=False``,
 distinct prompt length and speculation depth) replays the mixed trace for
 ``speedup_mixed``.
 
+SLO control plane: the mixed trace is replayed with alternating tight /
+relaxed per-request SLO targets (the mixed-SLO trace) on the full control
+plane (per-row speculation depths + SLO routing) and on a single-depth /
+FIFO baseline engine; the ``slo`` block records TTFT/TPOT attainment for
+both plus the mean speculation depth per SLO class (tick-time metrics).
+
   PYTHONPATH=src python benchmarks/engine_bench.py               # standard
   PYTHONPATH=src python benchmarks/engine_bench.py --reduced     # CI smoke
   PYTHONPATH=src python benchmarks/engine_bench.py --fail-on-retrace
@@ -50,6 +56,63 @@ def _clip_prompts(reqs, max_prompt: int):
     for sim in reqs:
         sim.request.prompt = list(sim.request.prompt)[:max_prompt]
     return [sim.request for sim in reqs]
+
+
+# tick-unit SLO classes for the mixed-SLO trace: tight rows must see their
+# first token within 3 engine ticks and sustain >= 1 token/tick; relaxed rows
+# only need eventual service.  Alternating assignment keeps the trace
+# adversarial (every queue wave holds both classes).
+SLO_TIGHT = (3.0, 1.0)     # (slo_ttft, slo_tpot)
+SLO_RELAXED = (50.0, 4.0)
+
+
+def attach_slos(reqs):
+    for i, r in enumerate(reqs):
+        r.slo_ttft, r.slo_tpot = SLO_TIGHT if i % 2 == 0 else SLO_RELAXED
+        # deadlines are relative to arrival; let the scheduler stamp the
+        # submission tick (the serving engine's clock has been running)
+        r.arrival_time = None
+    return reqs
+
+
+def slo_attainment(reqs) -> Dict[str, float]:
+    """TTFT/TPOT attainment + mean depth per SLO class (engine-tick time).
+
+    Each target is judged over the requests that carry it (partial-SLO
+    requests are legal); shed requests miss every target they carry.
+    """
+    ttft_ok = ttft_n = tpot_ok = tpot_n = n = 0
+    depth: Dict[str, List[float]] = {"tight": [], "relaxed": []}
+    for r in reqs:
+        if r.slo_ttft is None and r.slo_tpot is None:
+            continue
+        n += 1
+        arrived = r.arrival_time or 0.0
+        infeasible = r.error == "slo_infeasible"
+        if r.slo_ttft is not None:
+            ttft_n += 1
+            if not infeasible and r.token_times and (
+                r.token_times[0] - arrived
+            ) <= r.slo_ttft:
+                ttft_ok += 1
+        if r.slo_tpot is not None:
+            tpot_n += 1
+            measured = r.measured_tpot()
+            # <2 distinct token times: trivially attained
+            if not infeasible and (measured is None or measured <= r.slo_tpot):
+                tpot_ok += 1
+        cls = "tight" if (r.slo_ttft, r.slo_tpot) == SLO_TIGHT else "relaxed"
+        if r.spec_depths:
+            depth[cls].append(sum(r.spec_depths) / len(r.spec_depths))
+    mean = lambda xs: round(sum(xs) / len(xs), 2) if xs else 0.0  # noqa: E731
+    return {
+        "requests": n,
+        "ttft_attainment": round(ttft_ok / max(ttft_n, 1), 3),
+        "tpot_attainment": round(tpot_ok / max(tpot_n, 1), 3),
+        "shed": sum(1 for r in reqs if r.error == "slo_infeasible"),
+        "mean_depth_tight": mean(depth["tight"]),
+        "mean_depth_relaxed": mean(depth["relaxed"]),
+    }
 
 
 def serve_trace(engine, reqs, max_steps: int = 20_000) -> Dict[str, float]:
@@ -145,6 +208,28 @@ def main(argv=None) -> int:
               f"p50 {r['p50_step_ms']:6.1f}ms  p99 {r['p99_step_ms']:6.1f}ms  "
               f"retraces {r['retraces_steady']}")
 
+    # ---- SLO control plane on the mixed-SLO trace --------------------------
+    # full plane (per-row depths + SLO routing, the default) vs a
+    # single-depth / FIFO engine; both warmed, both retrace-free
+    print("engine_bench: mixed-SLO trace (per-row depths + SLO routing)")
+    slo_reqs = attach_slos(trace("mixed"))
+    results["mixed_slo"] = serve_trace(engine, slo_reqs)
+    slo_full = slo_attainment(slo_reqs)
+    print(f"  slo        ttft {slo_full['ttft_attainment']:.0%}  "
+          f"tpot {slo_full['tpot_attainment']:.0%}  "
+          f"depth tight/relaxed {slo_full['mean_depth_tight']}/"
+          f"{slo_full['mean_depth_relaxed']}")
+    single_engine = PipeServeEngine(
+        cfg, params, n_pairs=1,
+        econf=EngineConfig(per_row_depth=False, slo_routing=False, **base),
+    )
+    single_engine.warmup(max_prompt_len=max_prompt)
+    slo_base_reqs = attach_slos(trace("mixed"))
+    results["mixed_slo_baseline"] = serve_trace(single_engine, slo_base_reqs)
+    slo_base = slo_attainment(slo_base_reqs)
+    print(f"  slo-base   ttft {slo_base['ttft_attainment']:.0%}  "
+          f"tpot {slo_base['tpot_attainment']:.0%}")
+
     # ---- bucketing-off baseline (pre-PR hot path) on the mixed trace -------
     legacy = None
     if not args.skip_legacy:
@@ -165,6 +250,15 @@ def main(argv=None) -> int:
         "config": {"n_layers": cfg.n_layers, "max_new_tokens": max_new, **base},
         "warmup": {"programs": n_programs, "wall_s": round(warmup_s, 2)},
         "workloads": results,
+        "slo": {
+            "trace": "mixed_slo",
+            "tight": {"slo_ttft": SLO_TIGHT[0], "slo_tpot": SLO_TIGHT[1]},
+            "relaxed": {"slo_ttft": SLO_RELAXED[0], "slo_tpot": SLO_RELAXED[1]},
+            **slo_full,
+            "baseline_ttft_attainment": slo_base["ttft_attainment"],
+            "baseline_tpot_attainment": slo_base["tpot_attainment"],
+            "baseline_shed": slo_base["shed"],
+        },
         "legacy_mixed": legacy,
         "speedup_mixed": (
             round(results["mixed"]["tokens_per_s"] / legacy["tokens_per_s"], 2)

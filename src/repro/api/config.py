@@ -52,6 +52,12 @@ class ServeConfig:
     prefill_bucket_min: int = 16     # smallest prompt-length bucket
     admit_batch: int = 4             # max admissions fused into one prefill call
     verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS  # traced depths
+    # ---- SLO control plane ------------------------------------------------
+    per_row_depth: bool = True       # per-slot speculation depths (needs
+                                     # verify_buckets; falls back to a single
+                                     # shared depth when they are disabled)
+    slo_routing: bool = True         # TTFT-slack routing + EDF prefill order
+                                     # + shed-infeasible admission guard
     # ---- workload defaults ------------------------------------------------
     max_new_tokens: int = 64         # default SamplingParams.max_new_tokens
     seed: int = 0
@@ -89,6 +95,10 @@ class ServeConfig:
                     f"(got {self.verify_buckets!r})"
                 )
             object.__setattr__(self, "verify_buckets", vb)
+        for field in ("per_row_depth", "slo_routing", "prefill_buckets", "reduced"):
+            v = getattr(self, field)
+            if not isinstance(v, bool):
+                raise ValueError(f"{field} must be a bool (got {v!r})")
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
         if self.n_layers is not None and self.n_layers < 1:
@@ -222,6 +232,8 @@ class ServeConfig:
             prefill_bucket_min=self.prefill_bucket_min,
             admit_batch=self.admit_batch,
             verify_buckets=self.verify_buckets,
+            per_row_depth=self.per_row_depth,
+            slo_routing=self.slo_routing,
         )
 
     def to_sim_config(self, **overrides):

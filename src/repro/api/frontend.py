@@ -38,9 +38,21 @@ class RequestHandle:
                  slo_ttft: Optional[float] = None, slo_tpot: Optional[float] = None):
         self._serve = serve
         self.request = request
-        self.slo_ttft = slo_ttft      # target time-to-first-token (engine ticks)
-        self.slo_tpot = slo_tpot      # target mean time-per-output-token
+        # targets live on the Request (the engine routes and budgets
+        # speculation on them); mirrored here for handle-level reads
+        if slo_ttft is not None:
+            request.slo_ttft = slo_ttft
+        if slo_tpot is not None:
+            request.slo_tpot = slo_tpot
         self._cursor = 0
+
+    @property
+    def slo_ttft(self) -> Optional[float]:
+        return self.request.slo_ttft
+
+    @property
+    def slo_tpot(self) -> Optional[float]:
+        return self.request.slo_tpot
 
     # ----------------------------------------------------------------- state
     @property
@@ -54,6 +66,12 @@ class RequestHandle:
     @property
     def done(self) -> bool:
         return self.request.state in _TERMINAL
+
+    @property
+    def cancelled(self) -> bool:
+        """Terminal cancellation flag — no state polling needed; mirrored on
+        the request's RequestRecord for offline attainment accounting."""
+        return self.request.state is RequestState.CANCELLED
 
     # ------------------------------------------------------------- streaming
     def stream(self, max_stall_steps: int = 10_000) -> Iterator[int]:
@@ -93,8 +111,7 @@ class RequestHandle:
         arrived = req.arrival_time if req.arrival_time is not None else 0.0
         ttft = (req.t_first_token - arrived) if req.t_first_token else None
         latency = (req.t_end - arrived) if self.done and req.t_end else None
-        gaps = [b - a for a, b in zip(req.token_times, req.token_times[1:])]
-        tpot = sum(gaps) / len(gaps) if gaps else None
+        tpot = req.measured_tpot()
         return {
             "request_id": req.request_id,
             "state": req.state.value,
@@ -104,6 +121,12 @@ class RequestHandle:
             "ttft": ttft,
             "tpot": tpot,
             "latency": latency,
+            "cancelled": self.cancelled,
+            "slo_infeasible": req.error == "slo_infeasible",
+            "mean_depth": (
+                sum(req.spec_depths) / len(req.spec_depths)
+                if req.spec_depths else None
+            ),
             "ttft_ok": None if ttft is None or self.slo_ttft is None
             else ttft <= self.slo_ttft,
             "tpot_ok": None if tpot is None or self.slo_tpot is None
@@ -175,9 +198,10 @@ class StreamServe:
                 f"prompt ({len(prompt)}) + max_new_tokens ({params.max_new_tokens}) "
                 f"exceeds max_len ({self.config.max_len})"
             )
-        req = Request(prompt=prompt, params=params)
+        req = Request(prompt=prompt, params=params,
+                      slo_ttft=slo_ttft, slo_tpot=slo_tpot)
         self.engine.submit(req)
-        return RequestHandle(self, req, slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+        return RequestHandle(self, req)
 
     def cancel(self, request_id: str) -> bool:
         return self.engine.cancel(request_id)
@@ -223,5 +247,10 @@ class StreamServe:
                 "queue_depth": m.queue_depth,
                 "active_load": pair.load,
                 "spec_depth": d.bucket_depth if d else None,
+                # per-row control plane: each occupied slot's latest depth
+                "slot_depths": [
+                    r.spec_depths[-1] if r is not None and r.spec_depths else None
+                    for r in pair.slot_req
+                ],
             })
         return out

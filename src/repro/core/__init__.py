@@ -7,6 +7,7 @@ from repro.core.scheduler import StreamScheduler  # noqa: F401
 from repro.core.specustream import (  # noqa: F401
     DEPTH_BUCKETS,
     FixedSpeculation,
+    SlotSignals,
     SpecDecision,
     SpecuStream,
     SpecuStreamConfig,

@@ -51,8 +51,14 @@ from repro.api.registry import (
 from repro.configs.base import ArchConfig
 from repro.core.metrics import PerformanceMonitor, RequestRecord
 from repro.core.scheduler import StreamScheduler
-from repro.core.specustream import VERIFY_BUCKETS, SpecDecision, pad_to_bucket
+from repro.core.specustream import (
+    VERIFY_BUCKETS,
+    SlotSignals,
+    SpecDecision,
+    pad_to_bucket,
+)
 from repro.models import build_model
+from repro.serving.cost_model import PrefillDelayEstimator
 from repro.serving.draft import DraftContext, EngineDraft
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState
@@ -77,6 +83,30 @@ def _tree_insert_rows(big, small, slots: jax.Array):
         return b.at[slots].set(s.astype(b.dtype), mode="drop")  # (B,) leaves
 
     return jax.tree.map(ins, big, small)
+
+
+def _terminal_record(req: Request, now: float, kv_evicted: bool = False,
+                     cancelled: bool = False) -> RequestRecord:
+    """Terminal RequestRecord (finish, cancel, either path) with SLO fields.
+
+    ``req.worker_id`` is stamped at submission, so records are pair-agnostic
+    — queued-but-never-prefilled cancels build the same record as finishes.
+    """
+    depths = req.spec_depths
+    return RequestRecord(
+        request_id=req.request_id,
+        t_start=req.arrival_time,
+        t_end=now,
+        prompt_len=req.prompt_len,
+        generated=len(req.output_tokens),
+        token_times=list(req.token_times),
+        worker_id=req.worker_id,
+        kv_evicted=kv_evicted,
+        slo_ttft=req.slo_ttft,
+        slo_tpot=req.slo_tpot,
+        cancelled=cancelled,
+        mean_depth=sum(depths) / len(depths) if depths else 0.0,
+    )
 
 
 def _pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
@@ -163,6 +193,14 @@ class EngineConfig:
     prefill_bucket_min: int = 16     # smallest prompt-length bucket
     admit_batch: int = 4             # max admissions fused into one prefill call
     verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS
+    # ---- SLO control plane -------------------------------------------------
+    # per-row speculation depths: each decode slot independently picks a depth
+    # from its own acceptance EMA + TPOT headroom (needs verify_buckets — the
+    # shared bucket >= max row depth keeps traced shapes fixed)
+    per_row_depth: bool = True
+    # SLO-aware routing: FlowGuard TTFT-slack scoring, EDF prefill ordering,
+    # and the shed-on-negative-slack admission guard
+    slo_routing: bool = True
 
     def resolved_spec_policy(self) -> str:
         if self.spec_policy is not None:
@@ -238,6 +276,32 @@ class StreamPair:
                 return b
         return n  # oversize (prompt > max_len): correctness over shape reuse
 
+    def _spec_reset_slot(self, slot: int) -> None:
+        """Drop the policy's per-slot state when a slot changes occupant."""
+        reset = getattr(self.spec, "reset_slot", None)
+        if reset is not None:
+            reset(slot)
+
+    def _select_row_depths(self, throughput: float) -> np.ndarray:
+        """Per-row speculation depths (B,), 0 on empty slots.
+
+        Occupied rows pick independently from the policy's per-slot
+        acceptance EMA and the request's TPOT headroom (measured TPOT vs
+        ``slo_tpot``); rows sharing the batch still share one verify shape
+        because the engine pads to the bucket >= the max row depth.
+        """
+        signals: List[Optional[SlotSignals]] = []
+        for req in self.slot_req:
+            if req is None:
+                signals.append(None)
+            else:
+                signals.append(SlotSignals(
+                    slo_tpot=req.slo_tpot, tpot=req.measured_tpot(),
+                ))
+        return np.asarray(
+            self.spec.select_depths(signals, self.load, throughput), np.int64
+        )
+
     # ---------------------------------------------------------------- prefill
     def reserve_kv(self, req: Request) -> bool:
         """Allocate KV blocks for a request ahead of its (batched) prefill."""
@@ -291,6 +355,7 @@ class StreamPair:
             req.token_times.append(now)
             self.slot_req[slots[i]] = req
             self.histories[slots[i]] = list(req.prompt) + [tok]
+            self._spec_reset_slot(slots[i])  # fresh request, fresh EMA
 
     # ----------------------------------------------------------------- decode
     def decode_iteration(self, now: float) -> int:
@@ -300,12 +365,27 @@ class StreamPair:
         if not active:
             return 0
         B = self.econf.max_batch
+        throughput = self.monitor.workers[self.worker_id].recent_throughput
         decision: SpecDecision = self.spec.adapt(
-            self.acceptance,
-            self.load,
-            self.monitor.workers[self.worker_id].recent_throughput,
+            self.acceptance, self.load, throughput,
         )
-        k = min(decision.bucket_depth, self.draft.max_depth)
+        vb = self.econf.verify_buckets
+        # per-row depths need both the knob and a shared verify bucket set
+        # (the bucket >= max row depth is what keeps traced shapes fixed)
+        per_row = (
+            self.econf.per_row_depth
+            and vb is not None
+            and hasattr(self.spec, "select_depths")
+        )
+        if per_row:
+            rows = self._select_row_depths(throughput)
+        else:
+            rows = np.zeros((B,), np.int64)
+            rows[active] = decision.bucket_depth
+        rows = np.minimum(rows, self.draft.max_depth)
+        if vb:
+            rows = np.minimum(rows, vb[-1])
+        k = int(rows.max())
         active_mask = np.zeros((B,), bool)
         active_mask[active] = True
         active_dev = jnp.asarray(active_mask)
@@ -323,9 +403,6 @@ class StreamPair:
             return emitted
 
         # ---- draft proposal (real depth k, padded to a shape bucket) --------
-        vb = self.econf.verify_buckets
-        if vb:
-            k = min(k, vb[-1])
         k_pad = pad_to_bucket(k, vb)
         draft_toks, draft_q = self.draft.propose(self, k)
         draft_toks = jnp.asarray(draft_toks, jnp.int32)
@@ -333,7 +410,14 @@ class StreamPair:
         if k_pad > k:
             draft_toks = jnp.pad(draft_toks, ((0, 0), (0, k_pad - k)), mode="edge")
             draft_q = jnp.pad(draft_q, ((0, 0), (0, k_pad - k)), constant_values=1.0)
-        depth = jnp.full((B,), k, jnp.int32) if vb else None
+        if per_row:
+            # heterogeneous (B,) depths: traced VALUES in the existing traced
+            # shape — verify_tokens already masks per-row
+            depth = jnp.asarray(rows, jnp.int32)
+        else:
+            depth = jnp.full((B,), k, jnp.int32) if vb else None
+        for s in active:
+            self.slot_req[s].spec_depths.append(int(rows[s]))
 
         # ---- target verify step (T = k_pad+1 tokens, one traced shape/bucket)
         verify_in = jnp.concatenate([self.pending[:, None], draft_toks], axis=1)
@@ -355,7 +439,20 @@ class StreamPair:
         n_acc, nxt, draft_np = map(
             np.asarray, jax.device_get((res.n_accepted, res.next_token, draft_toks))
         )
-        accepted_frac = float(n_acc[active].mean()) / max(k, 1)
+        if per_row:
+            # per-row acceptance: each slot's fraction of ITS OWN depth feeds
+            # the policy's per-slot EMA; the pair-level EMA keeps the mean
+            observe = getattr(self.spec, "observe_slot", None)
+            fracs = []
+            for s in active:
+                d_s = int(rows[s])
+                frac = float(n_acc[s]) / max(d_s, 1)
+                fracs.append(frac)
+                if observe is not None and d_s > 0:
+                    observe(s, frac)
+            accepted_frac = sum(fracs) / len(fracs)
+        else:
+            accepted_frac = float(n_acc[active].mean()) / max(k, 1)
         self.acceptance = 0.8 * self.acceptance + 0.2 * accepted_frac
 
         emitted = 0
@@ -389,26 +486,18 @@ class StreamPair:
         req.state = RequestState.FINISHED
         req.t_end = now
         self.kv.free_sequence(req.request_id)
-        self.monitor.complete_request(
-            RequestRecord(
-                request_id=req.request_id,
-                t_start=req.arrival_time,
-                t_end=now,
-                prompt_len=req.prompt_len,
-                generated=len(req.output_tokens),
-                token_times=list(req.token_times),
-                worker_id=self.worker_id,
-                kv_evicted=kv_evicted,
-            )
-        )
+        self.monitor.complete_request(_terminal_record(req, now, kv_evicted=kv_evicted))
         self.slot_req[slot] = None
         self.histories[slot] = []
+        self._spec_reset_slot(slot)
 
     # ----------------------------------------------------------------- warmup
     def warmup(self, max_prompt_len: Optional[int] = None) -> int:
         """Pre-compile every steady-state shape bucket (prefill batches,
         verify depths, the plain step) ahead of traffic, then reset the lane.
         Returns the number of distinct programs exercised."""
+        assert not self.active_slots(), \
+            "warmup() resets the decode cache; call it before serving traffic"
         econf = self.econf
         B = econf.max_batch
         key = jax.random.PRNGKey(0)  # throwaway: must not perturb self.key
@@ -500,11 +589,12 @@ class ModelLaneDraft(EngineDraft):
     def warmup(self, pair, prefill_batches) -> None:
         key = jax.random.PRNGKey(0)
         B = self.lane.max_batch
-        drop_all = jnp.full((B,), B, jnp.int32)
         for batch in prefill_batches:
+            # one OOB (dropped) slot id per prefill ROW — admit buckets may
+            # exceed max_batch, so size by the batch, not the lane
             Bb = batch["tokens"].shape[0]
             _, small = self.lane.prefill(batch)
-            self.lane.insert_rows(drop_all[:Bb], small)
+            self.lane.insert_rows(jnp.full((Bb,), B, jnp.int32), small)
         logits = self.lane.decode(jnp.zeros((B, 1), jnp.int32))
         sample_probs(key, logits[:, -1], self.temperature)
         self.lane.commit(1, jnp.zeros((B,), jnp.int32))
@@ -541,7 +631,20 @@ class PipeServeEngine:
             router = resolve_router(router, config=self.econf.router_config)
         self._now = 0.0
         self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
-        self.scheduler = StreamScheduler(n_pairs, router, self.monitor)
+        # SLO routing prices queued prefill work in engine-tick units via the
+        # cost model, so TTFT slack is comparable with slo_ttft deadlines
+        estimator = None
+        if self.econf.slo_routing:
+            estimator = PrefillDelayEstimator(
+                cfg,
+                max_batch=self.econf.max_batch,
+                mean_context=max(self.econf.max_len // 2, 1),
+            )
+        self.scheduler = StreamScheduler(
+            n_pairs, router, self.monitor,
+            slo_routing=self.econf.slo_routing,
+            delay_estimator=estimator.ticks if estimator else None,
+        )
         self.pairs = [
             StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
             for i in range(n_pairs)
@@ -562,6 +665,9 @@ class PipeServeEngine:
         if req is not None:
             req.state = RequestState.CANCELLED
             req.t_end = self._now
+            self.monitor.complete_request(
+                _terminal_record(req, self._now, cancelled=True)
+            )
             return True
         for pair in self.pairs:
             for slot, req in enumerate(pair.slot_req):
@@ -569,9 +675,13 @@ class PipeServeEngine:
                     continue
                 pair.slot_req[slot] = None
                 pair.histories[slot] = []
+                pair._spec_reset_slot(slot)
                 pair.kv.free_sequence(req.request_id)
                 req.state = RequestState.CANCELLED
                 req.t_end = self._now
+                self.monitor.complete_request(
+                    _terminal_record(req, self._now, cancelled=True)
+                )
                 return True
         return False
 
@@ -587,9 +697,11 @@ class PipeServeEngine:
                 continue
             pair.slot_req[slot] = None
             pair.histories[slot] = []
+            pair._spec_reset_slot(slot)
             pair.kv.free_sequence(req.request_id)
             req.output_tokens.clear()
             req.token_times.clear()
+            req.spec_depths.clear()
             req.state = RequestState.QUEUED
             self.scheduler.submit(req, self._now)
             rerouted += 1
@@ -611,7 +723,7 @@ class PipeServeEngine:
                 batch: List[Request] = []
                 blocked = False
                 while len(batch) < cap:
-                    req = self.scheduler.next_for_prefill(wid)
+                    req = self.scheduler.next_for_prefill(wid, self._now)
                     if req is None:
                         break
                     if not pair.reserve_kv(req):

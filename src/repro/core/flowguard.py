@@ -32,11 +32,17 @@ class FlowGuardConfig:
     overload_threshold: float = 0.85  # τ
     q_max: int = 16               # Q_max queue-depth normaliser
     staleness_s: float = STALENESS_S
+    # weight of the additive TTFT-slack term for SLO-carrying requests
+    # (outside the Eq-1 convex combination: zero for best-effort traffic,
+    # so the paper's scoring is unchanged when no SLOs are in play)
+    slo_weight: float = 0.5
 
     def __post_init__(self) -> None:
         s = self.alpha_cache + self.alpha_memory + self.alpha_queue + self.alpha_load
         if abs(s - 1.0) > 1e-6:
             raise ValueError(f"routing weights must sum to 1 (got {s})")
+        if self.slo_weight < 0.0:
+            raise ValueError(f"slo_weight must be >= 0 (got {self.slo_weight})")
 
 
 class FlowGuard:
@@ -64,18 +70,45 @@ class FlowGuard:
     def is_overloaded(self, m: WorkerMetrics) -> bool:
         return self.overload_score(m) > self.config.overload_threshold
 
+    # ----------------------------------------------------------- SLO slack
+    def slo_slack_term(
+        self,
+        request,
+        queue_delay: float,
+        now: float,
+    ) -> float:
+        """Additive TTFT-slack score for an SLO-carrying request.
+
+        slack = slo_ttft − elapsed − estimated queue delay, normalised by the
+        target and clipped to [−1, 1]: a worker whose queue would already
+        blow the deadline scores a full ``slo_weight`` below one with slack.
+        Best-effort requests (no ``slo_ttft``) contribute 0 — Eq 1 intact.
+        """
+        slo = getattr(request, "slo_ttft", None) if request is not None else None
+        if slo is None or slo <= 0.0:
+            return 0.0
+        arrival = getattr(request, "arrival_time", None)
+        elapsed = max(now - arrival, 0.0) if arrival is not None else 0.0
+        slack = slo - elapsed - max(queue_delay, 0.0)
+        return self.config.slo_weight * min(max(slack / slo, -1.0), 1.0)
+
     # ----------------------------------------------------------- Alg 2
     def select(
         self,
         metrics: Dict[int, WorkerMetrics],
         now: float,
         healthy: Optional[Iterable[int]] = None,
+        request=None,
+        queue_delays: Optional[Dict[int, float]] = None,
     ) -> Tuple[int, Dict[int, float]]:
         """Pick the target stream pair.  Returns (worker_id, scores).
 
         ``healthy`` restricts candidates (fault tolerance: dead workers are
         excluded upstream).  Falls back to min queue depth when every
-        candidate is overloaded or stale (Eq 4).
+        candidate is overloaded or stale (Eq 4).  When the scheduler passes
+        the ``request`` and per-worker ``queue_delays`` (estimated ticks of
+        queued prefill work), SLO-carrying requests are additionally steered
+        toward the worker with the most TTFT slack.
         """
         candidates = list(metrics.keys() if healthy is None else healthy)
         if not candidates:
@@ -89,6 +122,8 @@ class FlowGuard:
             if self.is_overloaded(m):
                 continue
             scores[i] = self.score(m)
+            if queue_delays is not None:
+                scores[i] += self.slo_slack_term(request, queue_delays.get(i, 0.0), now)
             avail.append(i)
         if not avail:
             # Eq 4 fallback: least-loaded queue among healthy candidates
@@ -104,7 +139,8 @@ class RoundRobinRouter:
     def __init__(self):
         self._next = 0
 
-    def select(self, metrics, now, healthy=None) -> Tuple[int, Dict[int, float]]:
+    def select(self, metrics, now, healthy=None, request=None,
+               queue_delays=None) -> Tuple[int, Dict[int, float]]:
         candidates = sorted(metrics.keys() if healthy is None else healthy)
         pick = candidates[self._next % len(candidates)]
         self._next += 1

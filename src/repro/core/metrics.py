@@ -47,6 +47,16 @@ class RequestRecord:
     # the sequence was truncated mid-decode because the KV block pool ran dry
     # (finished gracefully rather than over-committing accounting)
     kv_evicted: bool = False
+    # ---- SLO control plane ------------------------------------------------
+    slo_ttft: Optional[float] = None   # targets carried by the request
+    slo_tpot: Optional[float] = None
+    # shed by the admission guard: its TTFT slack was already negative when a
+    # prefill slot opened, so serving it could only miss (and hurt others)
+    slo_infeasible: bool = False
+    # terminal cancellation (client-initiated); excluded from attainment
+    cancelled: bool = False
+    # mean per-row speculation depth over the request's verify steps
+    mean_depth: float = 0.0
 
     @property
     def latency(self) -> float:
@@ -73,6 +83,24 @@ class RequestRecord:
         """Eq 19: (prompt + generated) tokens / latency."""
         lat = self.latency
         return (self.prompt_len + self.generated) / lat if lat > 0 else 0.0
+
+    @property
+    def ttft_ok(self) -> Optional[bool]:
+        """TTFT attainment: None when no target; shed requests always miss."""
+        if self.slo_ttft is None:
+            return None
+        if self.slo_infeasible or not self.token_times:
+            return False
+        return self.ttft <= self.slo_ttft
+
+    @property
+    def tpot_ok(self) -> Optional[bool]:
+        """TPOT attainment: None when no target; <2 tokens attains trivially."""
+        if self.slo_tpot is None:
+            return None
+        if self.slo_infeasible:
+            return False
+        return self.tpot <= self.slo_tpot
 
 
 class PerformanceMonitor:
@@ -128,19 +156,39 @@ class PerformanceMonitor:
         recs = self.completed
         if not recs:
             return {}
-        lats = sorted(r.latency for r in recs)
-        ttfts = sorted(r.ttft for r in recs)
-        tpots = [r.tpot for r in recs if r.tpot > 0]
-        tputs = [r.throughput for r in recs]
+        # latency/throughput aggregates describe SERVED traffic: cancelled
+        # and admission-shed records are counted separately, not averaged in
+        # (a shed record's "latency" is pure queueing and would skew p50)
+        served = [r for r in recs if not r.cancelled and not r.slo_infeasible]
+        if not served:
+            served = recs  # degenerate: nothing served; keep the keys total
+        lats = sorted(r.latency for r in served)
+        ttfts = sorted(r.ttft for r in served)
+        tpots = [r.tpot for r in served if r.tpot > 0]
+        tputs = [r.throughput for r in served]
 
         def pct(vals: List[float], p: float) -> float:
             idx = min(int(p / 100.0 * len(vals)), len(vals) - 1)
             return vals[idx]
 
-        t0 = min(r.t_start for r in recs)
-        t1 = max(r.t_end for r in recs)
-        total_tokens = sum(r.prompt_len + r.generated for r in recs)
+        t0 = min(r.t_start for r in served)
+        t1 = max(r.t_end for r in served)
+        total_tokens = sum(r.prompt_len + r.generated for r in served)
+        # SLO attainment over records that carry a target (cancelled requests
+        # are the client's choice, not a serving miss — excluded)
+        ttft_judged = [r.ttft_ok for r in recs if not r.cancelled
+                       and r.ttft_ok is not None]
+        tpot_judged = [r.tpot_ok for r in recs if not r.cancelled
+                       and r.tpot_ok is not None]
         return {
+            "slo_ttft_attainment": (
+                sum(ttft_judged) / len(ttft_judged) if ttft_judged else 1.0
+            ),
+            "slo_tpot_attainment": (
+                sum(tpot_judged) / len(tpot_judged) if tpot_judged else 1.0
+            ),
+            "slo_infeasible": sum(1 for r in recs if r.slo_infeasible),
+            "cancelled": sum(1 for r in recs if r.cancelled),
             "n": len(recs),
             "latency_mean": sum(lats) / len(lats),
             "latency_p50": pct(lats, 50),

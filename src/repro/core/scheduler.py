@@ -5,19 +5,43 @@ stream pair's prefill queue, and tracks lifecycle transitions.  Health
 tracking lives here too: dead/drained workers are excluded from routing and
 their queued (not-yet-prefilled) requests are re-routed — the fault-tolerance
 behaviour exercised by tests/test_fault_tolerance.py.
+
+SLO control plane (``slo_routing=True``):
+
+* **Routing** — submit() hands the router the request plus a per-worker
+  queue-delay estimate (cost-model ticks of queued prefill work), so
+  FlowGuard's TTFT-slack term can steer deadline-carrying requests away from
+  backed-up queues.
+* **EDF ordering** — prefill queues drain earliest-deadline-first (deadline =
+  arrival + slo_ttft; best-effort requests sort last, FIFO among themselves)
+  instead of strictly FIFO.
+* **Admission guard** — a request whose TTFT slack is already negative when a
+  prefill slot opens (its deadline has passed before service could start) is
+  shed: serving it could only miss, while delaying feasible work behind it.
+  Shed requests finish FAILED with ``error="slo_infeasible"`` and a
+  ``slo_infeasible`` RequestRecord.
 """
 from __future__ import annotations
 
+import math
 from collections import deque
-from typing import Deque, Dict, List, Optional, Protocol, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.flowguard import FlowGuard
-from repro.core.metrics import PerformanceMonitor
+from repro.core.metrics import PerformanceMonitor, RequestRecord
 from repro.serving.request import Request, RequestState
 
 
 class Router(Protocol):
-    def select(self, metrics, now, healthy=None) -> Tuple[int, Dict[int, float]]: ...
+    def select(self, metrics, now, healthy=None, request=None,
+               queue_delays=None) -> Tuple[int, Dict[int, float]]: ...
+
+
+def _deadline(req: Request) -> float:
+    """EDF key: absolute TTFT deadline; best-effort requests sort last."""
+    if req.slo_ttft is None:
+        return math.inf
+    return (req.arrival_time or 0.0) + req.slo_ttft
 
 
 class StreamScheduler:
@@ -26,6 +50,9 @@ class StreamScheduler:
         n_pairs: int,
         router: Optional[Router] = None,
         monitor: Optional[PerformanceMonitor] = None,
+        *,
+        slo_routing: bool = False,
+        delay_estimator: Optional[Callable[[Request], float]] = None,
     ):
         self.n_pairs = n_pairs
         self.router: Router = router or FlowGuard()
@@ -33,14 +60,47 @@ class StreamScheduler:
         self.prefill_queues: Dict[int, Deque[Request]] = {i: deque() for i in range(n_pairs)}
         self.healthy: Dict[int, bool] = {i: True for i in range(n_pairs)}
         self.routing_log: List[Tuple[str, int]] = []
+        self.slo_routing = slo_routing
+        self.delay_estimator = delay_estimator
+        self.shed: List[Request] = []
+        # routers predating the SLO plumbing (custom plugins) keep working:
+        # only pass the extra kwargs to routers that declare them
+        self._router_slo_aware = self._accepts_slo_kwargs(self.router)
+
+    @staticmethod
+    def _accepts_slo_kwargs(router: Router) -> bool:
+        import inspect
+
+        try:
+            sig = inspect.signature(router.select)
+        except (TypeError, ValueError):
+            return False
+        params = sig.parameters.values()
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+            return True
+        names = {p.name for p in params}
+        return {"request", "queue_delays"} <= names
 
     # ---------------------------------------------------------------- routing
+    def queue_delay(self, worker_id: int) -> float:
+        """Estimated ticks of prefill service sitting in a worker's queue."""
+        if self.delay_estimator is None:
+            return float(len(self.prefill_queues[worker_id]))
+        return sum(self.delay_estimator(r) for r in self.prefill_queues[worker_id])
+
     def submit(self, req: Request, now: float) -> int:
         healthy = [i for i, ok in self.healthy.items() if ok]
         # FlowGuard reads queue depth live (Alg 2: fresh values)
         for i in healthy:
             self.monitor.update_worker(i, queue_depth=len(self.prefill_queues[i]))
-        worker, _ = self.router.select(self.monitor.snapshot(), now, healthy)
+        if self.slo_routing and self._router_slo_aware:
+            delays = {i: self.queue_delay(i) for i in healthy}
+            worker, _ = self.router.select(
+                self.monitor.snapshot(), now, healthy,
+                request=req, queue_delays=delays,
+            )
+        else:
+            worker, _ = self.router.select(self.monitor.snapshot(), now, healthy)
         req.worker_id = worker
         req.state = RequestState.QUEUED
         # stamp only unset arrivals — an explicit t=0 arrival is legitimate
@@ -50,9 +110,47 @@ class StreamScheduler:
         self.routing_log.append((req.request_id, worker))
         return worker
 
-    def next_for_prefill(self, worker_id: int) -> Optional[Request]:
+    def next_for_prefill(self, worker_id: int, now: Optional[float] = None) -> Optional[Request]:
+        """Pop the next request to prefill.
+
+        FIFO without SLO routing; with it, earliest-TTFT-deadline-first, and
+        requests that can no longer make their deadline are shed on the way
+        (the admission guard) rather than occupying a prefill slot.
+        """
         q = self.prefill_queues[worker_id]
-        return q.popleft() if q else None
+        while q:
+            if not self.slo_routing:
+                return q.popleft()
+            idx = min(range(len(q)), key=lambda i: _deadline(q[i]))
+            req = q[idx]
+            del q[idx]
+            # slack already negative: the deadline passed while queued, so
+            # even immediate service (this very tick) can only miss
+            if now is not None and req.slo_ttft is not None and now > _deadline(req):
+                self._shed(req, now)
+                continue
+            return req
+        return None
+
+    def _shed(self, req: Request, now: float) -> None:
+        """Admission guard: fail an SLO-infeasible request terminally."""
+        req.state = RequestState.FAILED
+        req.error = "slo_infeasible"
+        req.t_end = now
+        self.shed.append(req)
+        self.monitor.complete_request(
+            RequestRecord(
+                request_id=req.request_id,
+                t_start=req.arrival_time or 0.0,
+                t_end=now,
+                prompt_len=req.prompt_len,
+                generated=0,
+                worker_id=req.worker_id,
+                slo_ttft=req.slo_ttft,
+                slo_tpot=req.slo_tpot,
+                slo_infeasible=True,
+            )
+        )
 
     def queue_depth(self, worker_id: int) -> int:
         return len(self.prefill_queues[worker_id])

@@ -20,7 +20,9 @@ verify step.  This is the TPU adaptation recorded in DESIGN.md §2.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.api.registry import register_spec_policy
 
@@ -58,6 +60,34 @@ class SpecuStreamConfig:
     ema_new: float = 0.1
 
 
+@dataclasses.dataclass(frozen=True)
+class SlotSignals:
+    """Per-slot runtime signals for per-row depth selection.
+
+    ``tpot`` is the request's measured mean inter-token time (engine ticks on
+    CPU, wall seconds on hardware); ``slo_tpot`` its target, None = best
+    effort.  Acceptance is tracked inside the policy (per-slot EMA), so the
+    engine only ships what the policy cannot observe itself.
+    """
+
+    slo_tpot: Optional[float] = None
+    tpot: Optional[float] = None
+
+
+def tpot_headroom(tpot: Optional[float], slo_tpot: Optional[float]) -> float:
+    """Normalised TPOT slack in [0, 1]: 1 = unconstrained / all headroom,
+    0 = at or past the target.
+
+    Before the first measurable inter-token gap the request is priced at the
+    non-speculative rate (1 token per tick), so a target tighter than plain
+    decoding starts conservative instead of optimistic.
+    """
+    if slo_tpot is None or slo_tpot <= 0.0:
+        return 1.0
+    measured = tpot if tpot is not None and tpot > 0.0 else 1.0
+    return min(max((slo_tpot - measured) / slo_tpot, 0.0), 1.0)
+
+
 @dataclasses.dataclass
 class SpecDecision:
     depth: float                 # raw d* (Eq 13)
@@ -81,12 +111,61 @@ class SpecuStream:
     """Per-worker adaptive speculation controller (one instance per decode
     lane; state = the flow vector + τ_recent)."""
 
+    ACCEPT_PRIOR = 0.7  # optimistic prior for a freshly admitted slot
+
     def __init__(self, config: Optional[SpecuStreamConfig] = None):
         self.config = config or SpecuStreamConfig()
         self.flow: List[float] = [0.0] * self.config.history
         self.idx = 0
         self.tau_recent = self.config.target_throughput  # optimistic start
         self.last_decision: Optional[SpecDecision] = None
+        # per-slot acceptance EMAs (per-request: reset on admit/finish)
+        self.slot_acceptance: Dict[int, float] = {}
+
+    # ------------------------------------------------------- per-slot state
+    def observe_slot(self, slot: int, accepted_frac: float) -> None:
+        """Fold one verify outcome into the slot's acceptance EMA."""
+        prev = self.slot_acceptance.get(slot, self.ACCEPT_PRIOR)
+        frac = min(max(accepted_frac, 0.0), 1.0)
+        self.slot_acceptance[slot] = 0.8 * prev + 0.2 * frac
+
+    def reset_slot(self, slot: int) -> None:
+        """A new request took the slot (or it drained): drop its EMA."""
+        self.slot_acceptance.pop(slot, None)
+
+    def select_depths(
+        self,
+        signals: Sequence[Optional[SlotSignals]],
+        load: float,
+        throughput: float,
+    ) -> np.ndarray:
+        """Per-row depth selection (the AdaServe-style per-request control).
+
+        Each occupied slot (``signals[i] is not None``) independently runs
+        Eq 12–13 with its *own* acceptance EMA, then the continuous depth is
+        interpolated between d_min and the raw value by the row's TPOT
+        headroom — a request already at its ``slo_tpot`` target cannot afford
+        deeper (more expensive, riskier) verify steps, while a relaxed one
+        speculates to the full signal-driven depth.  Empty rows get 0.
+
+        The shared flow state (volatility, τ_recent) is advanced by the
+        engine's once-per-iteration :meth:`adapt` call, not here — this
+        method is read-only on global state so the two stay composable.
+        """
+        c = self.config
+        mag = self.last_decision.flow_magnitude if self.last_decision else 0.0
+        scale = max(1.0, c.target_throughput / max(throughput, 1.0))  # Eq 10
+        adj = 1.0 - min(max(load, 0.0), 0.9)                          # Eq 11
+        depths = np.zeros(len(signals), np.int64)
+        for i, sig in enumerate(signals):
+            if sig is None:
+                continue
+            a = self.slot_acceptance.get(i, self.ACCEPT_PRIOR)
+            d = c.d_base + (a * mag * c.gamma) * adj * scale          # Eq 12
+            d = min(max(d, float(c.d_min)), float(c.d_max))           # Eq 13
+            h = tpot_headroom(sig.tpot, sig.slo_tpot)
+            depths[i] = snap_to_bucket(c.d_min + (d - c.d_min) * h)
+        return depths
 
     # ------------------------------------------------------------- Alg 4
     def adapt(self, acceptance_rate: float, load: float, throughput: float) -> SpecDecision:
@@ -128,6 +207,22 @@ class FixedSpeculation:
 
     def __init__(self, depth: int):
         self.depth = depth
+
+    def observe_slot(self, slot: int, accepted_frac: float) -> None:
+        pass
+
+    def reset_slot(self, slot: int) -> None:
+        pass
+
+    def select_depths(
+        self,
+        signals: Sequence[Optional[SlotSignals]],
+        load: float,
+        throughput: float,
+    ) -> np.ndarray:
+        """Same fixed depth on every occupied row (SLO signals ignored)."""
+        d = self.adapt(0.0, load, throughput).bucket_depth
+        return np.array([0 if s is None else d for s in signals], np.int64)
 
     def adapt(self, acceptance_rate: float, load: float, throughput: float) -> SpecDecision:
         d = max(self.depth, 0)

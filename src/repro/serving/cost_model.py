@@ -179,3 +179,38 @@ class CostModel:
         nbytes = prompt_len * self.kv_bytes_per_token() + self.ssm_state_bytes()
         bw = self.hw.interconnect_bw if nixl else self.hw.host_staged_bw
         return nbytes / bw + self.hw.dispatch_overhead
+
+
+class PrefillDelayEstimator:
+    """Prices queued prefill work in *engine-tick* units for SLO routing.
+
+    The engine clock is logical (one tick per step), while the cost model
+    prices ops in seconds — the bridge is the decode step itself: one engine
+    tick ≈ one batched decode step, so a queued prompt costs its cost-model
+    prefill + KV-transfer time divided by the decode-step time.  Long prompts
+    (sum: ~600 tokens) therefore delay a queue by many tick-equivalents while
+    short chat prompts cost ~1, which is exactly the asymmetry FlowGuard's
+    TTFT-slack term and the EDF admission guard need to see.
+    """
+
+    def __init__(self, cfg: ArchConfig, hw: HardwareProfile = TPU_V5E,
+                 max_batch: int = 8, mean_context: int = 256):
+        self.cost = CostModel(cfg, hw=hw)
+        self.tick_s = self.cost.decode_step_time(max_batch, max(mean_context, 1))
+
+    def ticks(self, req) -> float:
+        """Estimated service ticks to prefill one queued request.
+
+        Memoised on the request (its prompt never changes while queued), so
+        re-scoring a deep queue on every submission stays O(queue) additions
+        instead of O(queue) cost-model evaluations.
+        """
+        cached = getattr(req, "_prefill_ticks", None)
+        if cached is not None:
+            return cached
+        plen = len(req.prompt)
+        t = self.cost.prefill_time(plen, getattr(req, "cache_hit_tokens", 0))
+        t += self.cost.kv_transfer_time(plen)
+        t = max(t / self.tick_s, 1.0)
+        req._prefill_ticks = t
+        return t

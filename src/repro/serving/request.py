@@ -37,6 +37,11 @@ class Request:
     # None = "not yet arrived"; the scheduler stamps submission time.  An
     # explicit value (including 0.0) is preserved verbatim.
     arrival_time: Optional[float] = None
+    # per-request SLO targets (engine ticks on CPU, wall seconds on hardware);
+    # None = best effort.  FlowGuard routes/sheds on slo_ttft, SpecuStream
+    # budgets per-row speculation depth on slo_tpot.
+    slo_ttft: Optional[float] = None
+    slo_tpot: Optional[float] = None
     # runtime state ----------------------------------------------------------
     state: RequestState = RequestState.QUEUED
     worker_id: int = -1
@@ -49,10 +54,20 @@ class Request:
     error: Optional[str] = None
     # provenance for prefix caching
     cache_hit_tokens: int = 0
+    # per-verify-step speculation depths this request ran at (observability
+    # for the per-row depth controller; averaged onto its RequestRecord)
+    spec_depths: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    def measured_tpot(self) -> Optional[float]:
+        """Mean inter-token time so far; None until two tokens exist."""
+        tt = self.token_times
+        if len(tt) < 2 or tt[-1] <= tt[0]:
+            return None
+        return (tt[-1] - tt[0]) / (len(tt) - 1)
 
     def is_done(self) -> bool:
         if len(self.output_tokens) >= self.params.max_new_tokens:

@@ -1,3 +1,10 @@
+"""Shared serving-test harness.
+
+Engine tests across modules reuse one seeded tiny model (session scope — the
+model init dominates test wall time), an engine factory with CPU-sized
+defaults, and canned deterministic arrival traces instead of re-building
+ad-hoc configs per module.
+"""
 import os
 
 # Tests run on the single real CPU device (the dry-run sets its own 512-way
@@ -7,3 +14,100 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import dataclasses  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slo: SLO control-plane serving-harness tests (run as `pytest -m slo`)",
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    """Seeded 2-layer reduced model: (ArchConfig, params), shared repo-wide."""
+    from repro.configs import reduced_config
+    from repro.distributed.sharding import unzip_params
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(reduced_config("qwen3-1.7b"), n_layers=2)
+    params, _ = unzip_params(build_model(cfg).init(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+@pytest.fixture
+def engine_factory(tiny_model):
+    """Build a ``PipeServeEngine`` over the shared tiny model.
+
+    Keyword arguments override the CPU-sized ``EngineConfig`` defaults
+    (``max_batch=2, max_len=96``); ``n_pairs`` picks the topology.
+    """
+    from repro.core.engine import EngineConfig, PipeServeEngine
+
+    cfg, params = tiny_model
+
+    def make(n_pairs=1, **econf_kw):
+        kw = dict(max_batch=2, max_len=96)
+        kw.update(econf_kw)
+        return PipeServeEngine(cfg, params, n_pairs=n_pairs,
+                               econf=EngineConfig(**kw))
+
+    return make
+
+
+# canned arrival traces reused across engine test modules ---------------------
+
+TRACE_NAMES = ("bursty", "uniform", "mixed_slo")
+
+# the adversarial mixed-SLO classes: half the trace needs first-token within
+# 4 ticks and >= 1 token/tick, the other half is effectively best-effort
+TRACE_SLO_TIGHT = (4.0, 0.25)      # (slo_ttft, slo_tpot)
+TRACE_SLO_RELAXED = (100.0, 8.0)
+
+
+def canned_trace(vocab_size, name, n=6, seed=0, max_new=8, lo=6, hi=50):
+    """Deterministic request traces for serving tests.
+
+    * ``bursty``    — every request arrives at submission time (queueing
+      pressure: the whole trace lands at once)
+    * ``uniform``   — request i carries ``arrival_time = 2 * i``; tests drive
+      staged submission against the engine clock
+    * ``mixed_slo`` — bursty arrivals with alternating tight / relaxed SLO
+      targets (even index = tight), the adversarial trace for the SLO
+      control plane
+    """
+    from repro.serving.request import Request, SamplingParams
+
+    assert name in TRACE_NAMES, f"unknown trace {name!r}; canned: {TRACE_NAMES}"
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        req = Request(
+            prompt=rng.integers(0, vocab_size, int(rng.integers(lo, hi))).tolist(),
+            params=SamplingParams(max_new_tokens=max_new),
+        )
+        if name == "uniform":
+            req.arrival_time = 2.0 * i
+        elif name == "mixed_slo":
+            req.slo_ttft, req.slo_tpot = (
+                TRACE_SLO_TIGHT if i % 2 == 0 else TRACE_SLO_RELAXED
+            )
+        reqs.append(req)
+    return reqs
+
+
+@pytest.fixture
+def trace_factory(tiny_model):
+    """Canned traces sized to the shared tiny model's vocab."""
+    cfg, _ = tiny_model
+
+    def make(name, n=6, seed=0, max_new=8, **kw):
+        return canned_trace(cfg.vocab_size, name, n=n, seed=seed,
+                            max_new=max_new, **kw)
+
+    return make

@@ -157,17 +157,44 @@ def test_cancel_queued_and_inflight(serve):
     # saturate both pairs (max_batch=2 * 2 pairs) so the 5th request queues
     block = [serve.submit(list(range(3, 13))) for _ in range(4)]
     queued = serve.submit(list(range(3, 13)))
+    assert not queued.cancelled
     assert queued.cancel()
     assert queued.state == RequestState.CANCELLED
+    assert queued.cancelled and queued.slo()["cancelled"] is True
     assert list(queued.stream()) == []
     inflight = block[0]
     serve.step()
     if not inflight.done:
         assert inflight.cancel()
         assert inflight.state == RequestState.CANCELLED
+        # no state polling needed: the terminal flag is on the handle, the
+        # record, and result() returns the partial output immediately
+        assert inflight.cancelled
+        assert inflight.result() == list(inflight.request.output_tokens)
+    cancelled_recs = [r for r in serve.monitor.completed if r.cancelled]
+    assert {r.request_id for r in cancelled_recs} >= {queued.request_id}
     assert serve.cancel("req-does-not-exist") is False
     for h in block[1:]:
         h.result()
+
+
+def test_cancel_mid_speculation_via_handle(serve):
+    """Cancel while the request is actively speculating: the handle flips to
+    cancelled, result() returns without polling, and the RequestRecord
+    carries the terminal flag."""
+    h = serve.submit(list(range(5, 15)), SamplingParams(max_new_tokens=40),
+                     slo_tpot=8.0)
+    it = h.stream()
+    for _ in range(3):
+        next(it)                       # mid-decode, speculation running
+    assert h.state == RequestState.DECODING
+    assert h.cancel() and h.cancelled
+    got = h.result()                   # returns immediately, no state polling
+    assert got == list(h.request.output_tokens) and len(got) >= 3
+    rec = next(r for r in serve.monitor.completed
+               if r.request_id == h.request_id)
+    assert rec.cancelled and rec.slo_tpot == 8.0
+    assert rec.generated == len(got)
 
 
 def test_submit_validates_prompt_budget(serve):

@@ -1,29 +1,15 @@
 """Bucketed hot-path correctness: padded prefill / depth-padded verify must
 be token-for-token invisible, steady state must be retrace-free, and KV pool
 exhaustion mid-decode must finish victims gracefully."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import reduced_config
 from repro.core import EngineConfig, PipeServeEngine
-from repro.distributed.sharding import unzip_params
-from repro.models import build_model
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState, SamplingParams
 from repro.serving.speculative import verify_tokens
-
-
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = reduced_config("qwen3-1.7b")
-    cfg = dataclasses.replace(cfg, n_layers=2)
-    model = build_model(cfg)
-    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
-    return cfg, params
 
 
 def _mixed_requests(cfg, n, seed, max_new=8, lo=6, hi=50):
@@ -37,10 +23,10 @@ def _mixed_requests(cfg, n, seed, max_new=8, lo=6, hi=50):
     ]
 
 
-def test_bucketed_greedy_outputs_bit_identical(small_model):
+def test_bucketed_greedy_outputs_bit_identical(tiny_model):
     """Padded-bucket prefill + depth-padded verify + batched admission must
     emit EXACTLY the tokens of the unbucketed seed path (greedy)."""
-    cfg, params = small_model
+    cfg, params = tiny_model
 
     def run(**kw):
         eng = PipeServeEngine(
@@ -98,10 +84,10 @@ def test_depth_padded_bonus_reads_depth_position():
     assert (np.asarray(res.next_token) == 9).all()
 
 
-def test_retrace_count_stops_growing_after_warmup(small_model):
+def test_retrace_count_stops_growing_after_warmup(tiny_model):
     """Serve 20 mixed-length requests after warmup(): the jit caches of every
     hot-path callable must not grow (zero steady-state retraces)."""
-    cfg, params = small_model
+    cfg, params = tiny_model
     eng = PipeServeEngine(cfg, params, n_pairs=1,
                           econf=EngineConfig(max_batch=3, max_len=96))
     eng.warmup(max_prompt_len=60)
@@ -120,10 +106,10 @@ def test_retrace_count_stops_growing_after_warmup(small_model):
     assert not grew, f"steady-state retraces: {grew}"
 
 
-def test_kv_exhaustion_finishes_victim_gracefully(small_model):
+def test_kv_exhaustion_finishes_victim_gracefully(tiny_model):
     """Block-pool exhaustion mid-decode truncates the victim and finishes it
     with kv_evicted instead of silently over-committing accounting."""
-    cfg, params = small_model
+    cfg, params = tiny_model
     eng = PipeServeEngine(
         cfg, params, n_pairs=1,
         econf=EngineConfig(max_batch=1, max_len=96, kv_blocks=24, kv_block_size=4),

@@ -1,0 +1,350 @@
+"""SLO control plane: per-row speculation depths + FlowGuard SLO routing.
+
+Locked down by the deterministic serving harness in conftest.py (shared tiny
+model, canned bursty / uniform / mixed-SLO traces).  Run as a named lane with
+``pytest -m slo``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flowguard import FlowGuard, FlowGuardConfig
+from repro.core.metrics import RequestRecord
+from repro.core.scheduler import StreamScheduler
+from repro.core.specustream import (
+    DEPTH_BUCKETS,
+    FixedSpeculation,
+    SlotSignals,
+    SpecuStream,
+    tpot_headroom,
+)
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.speculative import verify_tokens
+
+pytestmark = pytest.mark.slo
+
+
+def _req(n=8, slo_ttft=None, slo_tpot=None, max_new=4):
+    return Request(prompt=list(range(1, n + 1)),
+                   params=SamplingParams(max_new_tokens=max_new),
+                   slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+
+
+# ---------------------------------------------------------------------------
+# per-row verify depth correctness
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_depths_match_per_row_single_verifies():
+    """verify_tokens with a heterogeneous (B,) depth vector must be
+    bit-identical to a per-row loop of single-request verifies at each row's
+    exact depth (greedy: acceptance is RNG-free)."""
+    B, k_pad, V = 4, 8, 64
+    depths = np.array([1, 2, 4, 7])
+    key = jax.random.PRNGKey(11)
+    kl, kd = jax.random.split(key)
+    logits = jax.random.normal(kl, (B, k_pad + 1, V), jnp.float32)
+    draft = jax.random.randint(kd, (B, k_pad), 0, V)
+    q = jnp.ones((B, k_pad), jnp.float32)
+
+    batched = verify_tokens(key, draft, q, logits, temperature=0.0,
+                            depth=jnp.asarray(depths, jnp.int32))
+    for r in range(B):
+        d = int(depths[r])
+        single = verify_tokens(
+            jax.random.PRNGKey(100 + r),  # different key: greedy must not care
+            draft[r:r + 1, :d], q[r:r + 1, :d], logits[r:r + 1, :d + 1],
+            temperature=0.0,
+        )
+        assert int(batched.n_accepted[r]) == int(single.n_accepted[0])
+        assert int(batched.next_token[r]) == int(single.next_token[0])
+        assert int(batched.accept_idx[r]) == int(single.accept_idx[0])
+        assert int(batched.n_accepted[r]) <= d
+
+
+def test_padding_rows_never_affect_accepted_tokens():
+    """Property: whatever the logits/draft and whatever bucket the draft is
+    padded to, per-row results depend only on the row's real depth."""
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings, st = hypothesis.given, hypothesis.settings, hypothesis.strategies
+
+    @given(seed=st.integers(0, 2**16), B=st.integers(1, 4),
+           k_pad=st.integers(2, 8), data=st.data())
+    @settings(max_examples=60, deadline=None)
+    def prop(seed, B, k_pad, data):
+        V = 32
+        depths = np.array(
+            [data.draw(st.integers(1, k_pad)) for _ in range(B)], np.int32
+        )
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.normal(size=(B, k_pad + 1, V)), jnp.float32)
+        draft = jnp.asarray(rng.integers(0, V, (B, k_pad)), jnp.int32)
+        q = jnp.ones((B, k_pad), jnp.float32)
+        res = verify_tokens(jax.random.PRNGKey(seed), draft, q, logits,
+                            temperature=0.0, depth=jnp.asarray(depths))
+        for r in range(B):
+            d = int(depths[r])
+            single = verify_tokens(
+                jax.random.PRNGKey(seed ^ 0x5A5A),
+                draft[r:r + 1, :d], q[r:r + 1, :d], logits[r:r + 1, :d + 1],
+                temperature=0.0,
+            )
+            assert int(res.n_accepted[r]) <= d
+            assert int(res.n_accepted[r]) == int(single.n_accepted[0])
+            assert int(res.next_token[r]) == int(single.next_token[0])
+
+    prop()
+
+
+def test_per_row_engine_bit_identical_to_single_depth(engine_factory, trace_factory):
+    """At a fixed depth, enabling per-row depth plumbing must not change a
+    single emitted token (greedy)."""
+    def run(per_row):
+        eng = engine_factory(spec_policy="fixed", fixed_depth=4,
+                             per_row_depth=per_row)
+        reqs = trace_factory("bursty", n=5)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(max_steps=800)
+        return [tuple(r.output_tokens) for r in reqs]
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# SpecuStream per-row depth selection
+# ---------------------------------------------------------------------------
+
+
+def test_tpot_headroom_monotone_in_slo():
+    assert tpot_headroom(None, None) == 1.0
+    assert tpot_headroom(0.5, None) == 1.0
+    # tighter target => less headroom (measured TPOT fixed)
+    hs = [tpot_headroom(1.0, slo) for slo in (0.25, 0.5, 1.0, 4.0, 100.0)]
+    assert hs == sorted(hs)
+    assert hs[0] == 0.0            # violating => no headroom
+    assert 0.0 <= hs[-1] <= 1.0
+
+
+def test_select_depths_tight_rows_shallower():
+    ss = SpecuStream()
+    ss.adapt(0.7, 0.0, 1000.0)     # advance shared flow state once
+    sig_tight = SlotSignals(slo_tpot=0.25, tpot=1.0)
+    sig_relaxed = SlotSignals(slo_tpot=50.0, tpot=1.0)
+    depths = ss.select_depths([sig_tight, sig_relaxed, None], 0.0, 1000.0)
+    assert depths[2] == 0                       # empty slot
+    assert depths[0] < depths[1]                # tight < relaxed
+    assert all(int(d) in DEPTH_BUCKETS for d in depths[:2])
+
+
+def test_select_depths_uses_per_slot_acceptance():
+    ss = SpecuStream()
+    for _ in range(30):
+        ss.adapt(0.9, 0.0, 1.0)    # high-volatility flow state
+        ss.observe_slot(0, 1.0)    # slot 0: everything accepted
+        ss.observe_slot(1, 0.0)    # slot 1: everything rejected
+    free = SlotSignals()
+    d = ss.select_depths([free, free], 0.0, 1.0)
+    assert d[0] > d[1]
+    ss.reset_slot(0)
+    ss.reset_slot(1)
+    assert ss.slot_acceptance == {}
+
+
+def test_fixed_policy_select_depths_constant():
+    fs = FixedSpeculation(5)
+    d = fs.select_depths([SlotSignals(slo_tpot=0.1), None, SlotSignals()], 0.5, 10.0)
+    assert list(d) == [5, 0, 5]
+
+
+# ---------------------------------------------------------------------------
+# FlowGuard + scheduler SLO routing
+# ---------------------------------------------------------------------------
+
+
+def test_flowguard_slack_term_prefers_short_queue():
+    fg = FlowGuard(FlowGuardConfig(slo_weight=0.5))
+    req = _req(slo_ttft=10.0)
+    req.arrival_time = 0.0
+    # same per-worker score, different queued backlog
+    assert fg.slo_slack_term(req, queue_delay=0.0, now=0.0) > \
+        fg.slo_slack_term(req, queue_delay=20.0, now=0.0)
+    # best-effort requests contribute nothing (Eq 1 unchanged)
+    assert fg.slo_slack_term(_req(), 20.0, 0.0) == 0.0
+    with pytest.raises(ValueError):
+        FlowGuardConfig(slo_weight=-1.0)
+
+
+def test_edf_ordering_respects_ttft_slack():
+    s = StreamScheduler(1, FlowGuard(), slo_routing=True)
+    r_none, r_tight, r_relaxed = _req(), _req(slo_ttft=5.0), _req(slo_ttft=100.0)
+    for r in (r_none, r_relaxed, r_tight):   # submission order != deadline order
+        s.submit(r, now=0.0)
+    order = [s.next_for_prefill(0, now=0.0) for _ in range(3)]
+    assert order == [r_tight, r_relaxed, r_none]
+    assert s.next_for_prefill(0, now=0.0) is None
+
+
+def test_edf_is_fifo_for_best_effort_traffic():
+    s = StreamScheduler(1, FlowGuard(), slo_routing=True)
+    reqs = [_req() for _ in range(5)]
+    for r in reqs:
+        s.submit(r, now=0.0)
+    assert [s.next_for_prefill(0, now=0.0) for _ in range(5)] == reqs
+
+
+def test_admission_guard_sheds_infeasible_requests():
+    s = StreamScheduler(1, FlowGuard(), slo_routing=True)
+    doomed, ok = _req(slo_ttft=3.0), _req()
+    s.submit(doomed, now=0.0)
+    s.submit(ok, now=0.0)
+    got = s.next_for_prefill(0, now=7.0)      # deadline (3.0) already passed
+    assert got is ok
+    assert doomed.state is RequestState.FAILED
+    assert doomed.error == "slo_infeasible"
+    assert s.shed == [doomed]
+    rec = s.monitor.completed[0]
+    assert rec.slo_infeasible and rec.ttft_ok is False
+    assert s.monitor.summary()["slo_infeasible"] == 1
+
+
+def test_slo_routing_improves_ttft_attainment(engine_factory, trace_factory):
+    """End-to-end on the adversarial mixed-SLO trace: EDF + shed must attain
+    at least as many TTFT targets as the FIFO / single-depth baseline."""
+    def attainment(slo_routing, per_row_depth):
+        eng = engine_factory(slo_routing=slo_routing, per_row_depth=per_row_depth)
+        reqs = trace_factory("mixed_slo", n=6)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done(max_steps=800)
+        s = eng.monitor.summary()
+        return s["slo_ttft_attainment"], s["slo_tpot_attainment"]
+
+    full = attainment(True, True)
+    base = attainment(False, False)
+    assert full[0] >= base[0]
+    assert full[1] >= base[1]
+
+
+def test_tight_tpot_requests_receive_lower_depths(engine_factory, trace_factory):
+    """Same trace, same engine: rows with tight slo_tpot run shallower
+    speculation than relaxed rows (per-slot TPOT headroom)."""
+    eng = engine_factory(max_batch=4)
+    reqs = trace_factory("mixed_slo", n=4, max_new=10)  # all admitted at once
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_steps=800)
+    recs = {rec.request_id: rec for rec in eng.monitor.completed}
+    tight = [recs[r.request_id].mean_depth for i, r in enumerate(reqs) if i % 2 == 0]
+    relaxed = [recs[r.request_id].mean_depth for i, r in enumerate(reqs) if i % 2 == 1]
+    assert all(d > 0 for d in tight + relaxed)
+    assert np.mean(tight) < np.mean(relaxed)
+
+
+def test_zero_retrace_regression_with_per_row_depths(engine_factory, trace_factory):
+    """The PR-2 contract must survive the SLO control plane: heterogeneous
+    per-row depths and EDF/shed admission change traced VALUES, never traced
+    shapes — the jit caches stay frozen after warmup."""
+    eng = engine_factory(max_batch=3)
+    eng.warmup(max_prompt_len=60)
+    before = eng.jit_cache_sizes()
+    reqs = trace_factory("mixed_slo", n=10, seed=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_steps=2000)
+    assert len(eng.monitor.completed) == 10   # served or shed, all recorded
+    after = eng.jit_cache_sizes()
+    grew = {n: (before[n], after[n]) for n in after if after[n] != before.get(n)}
+    assert not grew, f"steady-state retraces: {grew}"
+
+
+def test_uniform_trace_staged_arrivals(engine_factory, trace_factory):
+    """The canned uniform trace carries explicit arrival ticks; staged
+    submission keeps deadlines relative to those arrivals."""
+    eng = engine_factory()
+    reqs = trace_factory("uniform", n=4, max_new=4)
+    pending = list(reqs)
+    for _ in range(200):
+        while pending and pending[0].arrival_time <= eng._now:
+            eng.submit(pending.pop(0))
+        eng.step()
+        if not pending and eng.scheduler.pending_total() == 0 and all(
+            not p.active_slots() for p in eng.pairs
+        ):
+            break
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert len(eng.monitor.completed) == 4
+
+
+# ---------------------------------------------------------------------------
+# terminal cancelled flag
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_speculation_records_cancelled(engine_factory):
+    eng = engine_factory()
+    req = _req(n=12, max_new=32, slo_tpot=4.0)
+    eng.submit(req)
+    for _ in range(3):
+        eng.step()
+    assert req.state is RequestState.DECODING and req.output_tokens
+    assert eng.cancel(req.request_id)
+    assert req.state is RequestState.CANCELLED
+    rec = eng.monitor.completed[-1]
+    assert rec.request_id == req.request_id
+    assert rec.cancelled and rec.generated == len(req.output_tokens)
+    assert rec.slo_tpot == 4.0
+    pair = eng.pairs[0]
+    assert req.request_id not in pair.kv.seqs      # KV freed
+    assert pair.active_slots() == []
+    # slot is reusable and the engine keeps serving
+    nxt = _req(n=6, max_new=4)
+    eng.submit(nxt)
+    eng.run_until_done(max_steps=200)
+    assert nxt.state is RequestState.FINISHED
+    # cancelled requests are excluded from attainment, but counted
+    s = eng.monitor.summary()
+    assert s["cancelled"] == 1 and s["slo_tpot_attainment"] == 1.0
+
+
+def test_cancel_queued_records_cancelled(engine_factory):
+    eng = engine_factory(max_batch=1)
+    first, queued = _req(n=8, max_new=16), _req(n=8)
+    eng.submit(first)
+    eng.step()                       # first occupies the only slot
+    eng.submit(queued)
+    assert eng.cancel(queued.request_id)
+    assert queued.state is RequestState.CANCELLED
+    assert any(r.cancelled and r.request_id == queued.request_id
+               for r in eng.monitor.completed)
+
+
+# ---------------------------------------------------------------------------
+# metrics + config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_request_record_attainment_properties():
+    rec = RequestRecord("r", t_start=0.0, t_end=10.0, generated=3,
+                        token_times=[2.0, 3.0, 4.0], slo_ttft=3.0, slo_tpot=0.5)
+    assert rec.ttft_ok is True and rec.tpot_ok is False
+    assert RequestRecord("r", 0.0).ttft_ok is None
+    shed = RequestRecord("r", 0.0, slo_ttft=5.0, slo_tpot=5.0, slo_infeasible=True)
+    assert shed.ttft_ok is False and shed.tpot_ok is False
+
+
+def test_serveconfig_slo_knobs_round_trip():
+    from repro.api import ServeConfig
+
+    cfg = ServeConfig.reduced_smoke(per_row_depth=False, slo_routing=False)
+    econf = cfg.build_engine_config()
+    assert econf.per_row_depth is False and econf.slo_routing is False
+    again = ServeConfig.from_yaml(cfg.to_yaml())
+    assert again.per_row_depth is False and again.slo_routing is False
+    assert ServeConfig.reduced_smoke().build_engine_config().per_row_depth is True
+    with pytest.raises(ValueError):
+        ServeConfig.reduced_smoke(per_row_depth="yes")
+    with pytest.raises(ValueError):
+        ServeConfig.reduced_smoke(slo_routing=1)
