@@ -21,6 +21,13 @@ plane (per-row speculation depths + SLO routing) and on a single-depth /
 FIFO baseline engine; the ``slo`` block records TTFT/TPOT attainment for
 both plus the mean speculation depth per SLO class (tick-time metrics).
 
+Chunked prefill: a long-prompt trace (one near-max prompt followed by short
+deadline-carrying requests) is served with ``prefill_chunk`` on, preemption
+on vs off.  The ``chunked`` block records the compiled prefill trace count
+(the contract: exactly ONE regardless of prompt length) and the short
+requests' tick-time TTFT p99 under both scheduling modes — preemption must
+let the shorts jump the long prompt's chunks.
+
   PYTHONPATH=src python benchmarks/engine_bench.py               # standard
   PYTHONPATH=src python benchmarks/engine_bench.py --reduced     # CI smoke
   PYTHONPATH=src python benchmarks/engine_bench.py --fail-on-retrace
@@ -37,7 +44,7 @@ import json
 import sys
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Any, Dict, List
 
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
@@ -115,6 +122,56 @@ def slo_attainment(reqs) -> Dict[str, float]:
     }
 
 
+def long_prompt_trace(vocab_size: int, max_prompt: int, max_new: int,
+                      n_short: int = 3):
+    # n_short stays below the decode-slot count so the TTFT tail measures
+    # prefill interference, not decode-slot contention
+    """One near-max prompt plus short deadline-carrying requests — the
+    adversarial prefill-interference trace.  The shorts arrive AFTER the
+    long prompt has started prefilling (``serve_staged``): without chunked
+    preemption every one of them waits for the whole long prefill."""
+    import numpy as np
+
+    from repro.serving.request import Request, SamplingParams
+
+    rng = np.random.default_rng(17)
+    long = Request(prompt=rng.integers(0, vocab_size, max_prompt).tolist(),
+                   params=SamplingParams(max_new_tokens=max_new))
+    shorts = [
+        Request(prompt=rng.integers(0, vocab_size, 12).tolist(),
+                params=SamplingParams(max_new_tokens=max_new),
+                slo_ttft=60.0)  # earlier deadline than the long (best-effort)
+        for _ in range(n_short)
+    ]
+    return long, shorts
+
+
+def serve_staged(engine, long, shorts, max_steps: int = 2000) -> Dict[str, float]:
+    """Submit the long prompt, let it start prefilling for one tick, then
+    land the shorts mid-prefill and drain (tick-time metrics)."""
+    cache_before = engine.jit_cache_total()
+    engine.submit(long)
+    engine.step()
+    for r in shorts:
+        engine.submit(r)
+    steps = 1
+    while not engine.drained() and steps < max_steps:
+        engine.step()
+        steps += 1
+    return {
+        "steps": steps,
+        "retraces_steady": engine.jit_cache_total() - cache_before,
+    }
+
+
+def ttft_ticks(reqs) -> List[float]:
+    """Tick-time TTFT per request (deterministic, unlike wall-clock)."""
+    return [
+        r.token_times[0] - (r.arrival_time or 0.0)
+        for r in reqs if r.token_times
+    ]
+
+
 def serve_trace(engine, reqs, max_steps: int = 20_000) -> Dict[str, float]:
     """Submit a whole trace, drive the engine dry, measure wall-clock."""
     cache_before = engine.jit_cache_total()
@@ -124,9 +181,7 @@ def serve_trace(engine, reqs, max_steps: int = 20_000) -> Dict[str, float]:
     step_ms: List[float] = []
     first_tok_ms: Dict[str, float] = {}
     for _ in range(max_steps):
-        if engine.scheduler.pending_total() == 0 and all(
-            not p.active_slots() for p in engine.pairs if p.healthy
-        ):
+        if engine.drained():
             break
         t0 = time.perf_counter()
         engine.step()
@@ -230,6 +285,30 @@ def main(argv=None) -> int:
     print(f"  slo-base   ttft {slo_base['ttft_attainment']:.0%}  "
           f"tpot {slo_base['tpot_attainment']:.0%}")
 
+    # ---- chunked prefill on the long-prompt trace (preemption on vs off) ---
+    print("engine_bench: chunked prefill, long-prompt trace (preempt on/off)")
+    chunk = 48
+    chunked: Dict[str, Any] = {"trace": "long_prompt", "prefill_chunk": chunk}
+    for label, preempt in (("preempt_on", True), ("preempt_off", False)):
+        ceng = PipeServeEngine(
+            cfg, params, n_pairs=1,
+            econf=EngineConfig(prefill_chunk=chunk, prefill_preempt=preempt,
+                               **base),
+        )
+        ceng.warmup(max_prompt_len=max_prompt)
+        long_req, short_reqs = long_prompt_trace(cfg.vocab_size, max_prompt, max_new)
+        results[f"chunked_{label}"] = serve_staged(ceng, long_req, short_reqs)
+        shorts = _percentile(ttft_ticks(short_reqs), 99)
+        longs = ttft_ticks([long_req])
+        chunked[f"short_ttft_p99_ticks_{label}"] = shorts
+        chunked[f"long_ttft_ticks_{label}"] = longs[0] if longs else None
+        if preempt:
+            # the chunked contract: ONE compiled prefill program total
+            chunked["prefill_traces"] = ceng.jit_cache_sizes()["pair0.chunk_prefill"]
+        print(f"  {label:12s} short TTFT p99 {shorts:5.1f} ticks  "
+              f"long TTFT {chunked[f'long_ttft_ticks_{label}']}  "
+              f"retraces {results[f'chunked_{label}']['retraces_steady']}")
+
     # ---- bucketing-off baseline (pre-PR hot path) on the mixed trace -------
     legacy = None
     if not args.skip_legacy:
@@ -259,6 +338,7 @@ def main(argv=None) -> int:
             "baseline_tpot_attainment": slo_base["tpot_attainment"],
             "baseline_shed": slo_base["shed"],
         },
+        "chunked": chunked,
         "legacy_mixed": legacy,
         "speedup_mixed": (
             round(results["mixed"]["tokens_per_s"] / legacy["tokens_per_s"], 2)

@@ -52,6 +52,12 @@ class ServeConfig:
     prefill_bucket_min: int = 16     # smallest prompt-length bucket
     admit_batch: int = 4             # max admissions fused into one prefill call
     verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS  # traced depths
+    # chunked prefill: ingest prompts in fixed-size chunks through ONE
+    # compiled prefill step; the chunk boundary is a preemption point (EDF —
+    # a tight-deadline arrival parks a partially-prefilled long prompt).
+    # None = one-shot bucketed prefill (the default hot path).
+    prefill_chunk: Optional[int] = None
+    prefill_preempt: bool = True     # EDF preemption at chunk boundaries
     # ---- SLO control plane ------------------------------------------------
     per_row_depth: bool = True       # per-slot speculation depths (needs
                                      # verify_buckets; falls back to a single
@@ -95,7 +101,19 @@ class ServeConfig:
                     f"(got {self.verify_buckets!r})"
                 )
             object.__setattr__(self, "verify_buckets", vb)
-        for field in ("per_row_depth", "slo_routing", "prefill_buckets", "reduced"):
+        if self.prefill_chunk is not None:
+            if not isinstance(self.prefill_chunk, int) or self.prefill_chunk < 8:
+                raise ValueError(
+                    f"prefill_chunk must be an int >= 8 or None "
+                    f"(got {self.prefill_chunk!r})"
+                )
+            if self.prefill_chunk > self.max_len:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must not exceed "
+                    f"max_len ({self.max_len})"
+                )
+        for field in ("per_row_depth", "slo_routing", "prefill_buckets",
+                      "prefill_preempt", "reduced"):
             v = getattr(self, field)
             if not isinstance(v, bool):
                 raise ValueError(f"{field} must be a bool (got {v!r})")
@@ -232,6 +250,8 @@ class ServeConfig:
             prefill_bucket_min=self.prefill_bucket_min,
             admit_batch=self.admit_batch,
             verify_buckets=self.verify_buckets,
+            prefill_chunk=self.prefill_chunk,
+            prefill_preempt=self.prefill_preempt,
             per_row_depth=self.per_row_depth,
             slo_routing=self.slo_routing,
         )

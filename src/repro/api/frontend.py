@@ -217,9 +217,10 @@ class StreamServe:
 
     @property
     def pending(self) -> int:
-        """Requests queued or mid-decode across all pairs."""
+        """Requests queued, mid-chunked-prefill, or mid-decode across pairs."""
         return self.engine.scheduler.pending_total() + sum(
-            len(p.active_slots()) for p in self.engine.pairs if p.healthy
+            len(p.active_slots()) + p.prefill_in_flight()
+            for p in self.engine.pairs if p.healthy
         )
 
     # ----------------------------------------------------------------- admin

@@ -50,7 +50,7 @@ from repro.api.registry import (
 )
 from repro.configs.base import ArchConfig
 from repro.core.metrics import PerformanceMonitor, RequestRecord
-from repro.core.scheduler import StreamScheduler
+from repro.core.scheduler import StreamScheduler, edf_deadline
 from repro.core.specustream import (
     VERIFY_BUCKETS,
     SlotSignals,
@@ -58,6 +58,7 @@ from repro.core.specustream import (
     pad_to_bucket,
 )
 from repro.models import build_model
+from repro.models.attention import SPEC_MARGIN, cache_capacity
 from repro.serving.cost_model import PrefillDelayEstimator
 from repro.serving.draft import DraftContext, EngineDraft
 from repro.serving.kv_cache import KVCacheManager
@@ -193,6 +194,12 @@ class EngineConfig:
     prefill_bucket_min: int = 16     # smallest prompt-length bucket
     admit_batch: int = 4             # max admissions fused into one prefill call
     verify_buckets: Optional[Tuple[int, ...]] = VERIFY_BUCKETS
+    # chunked prefill: prompts are ingested in fixed-size chunks through ONE
+    # compiled prefill step (vs one trace per pow2 bucket), and the chunk
+    # boundary is a preemption point — an earlier-deadline arrival can park a
+    # partially-prefilled long prompt.  None = one-shot (bucketed) prefill.
+    prefill_chunk: Optional[int] = None
+    prefill_preempt: bool = True     # EDF preemption at chunk boundaries
     # ---- SLO control plane -------------------------------------------------
     # per-row speculation depths: each decode slot independently picks a depth
     # from its own acceptance EMA + TPOT headroom (needs verify_buckets — the
@@ -235,16 +242,59 @@ class StreamPair:
             econf.draft,
             DraftContext(cfg=cfg, econf=econf, draft_cfg=draft_cfg, draft_params=draft_params),
         )
-        # length bucketing needs right-padding to be invisible, which holds
-        # for causal attention but not for SSM state / enc-dec / frontends
-        self._bucketed = (
-            econf.prefill_buckets
-            and not cfg.is_encdec
+        # length bucketing / chunking need padding (resp. cursor-offset
+        # continuation) to be invisible, which holds for causal attention but
+        # not for SSM state / enc-dec / frontends
+        arch_ok = (
+            not cfg.is_encdec
             and cfg.frontend is None
             and all(kind == "attn" for kind in cfg.layer_kinds())
         )
+        self._bucketed = econf.prefill_buckets and arch_ok
         self._len_buckets = _pow2_buckets(econf.prefill_bucket_min, econf.max_len)
         self._admit_buckets = _pow2_buckets(1, max(econf.admit_batch, 1))
+        # ---- chunked prefill --------------------------------------------------
+        # One (R, C) chunk step — jitted once — replaces the whole bucket
+        # family; per-request cursors live on the host and a chunk row parks
+        # between chunks, which is what makes prefill preemptible.
+        self._chunk: Optional[int] = None
+        if econf.prefill_chunk and arch_ok:
+            if type(self.draft).on_admit is not EngineDraft.on_admit:
+                raise ValueError(
+                    "prefill_chunk is incompatible with drafts that mirror "
+                    "admission state (draft='model'); use 'ngram'/'none' or "
+                    "disable chunking"
+                )
+            # Chunk-size safety clamps.  Every chunk step writes C positions
+            # starting at a multiple of C (real tokens and the rewound padding
+            # of partial/idle rows alike), so C must divide the cache capacity
+            # or the final window wraps the ring and clobbers the prompt head
+            # with padding stamped at wrapped positions.  Sliding-window
+            # caches additionally bound the write burst by SPEC_MARGIN — the
+            # ring slack that keeps in-step writes from evicting positions
+            # still inside the earliest query's attention window (the same
+            # guarantee speculative decoding relies on).
+            cap = cache_capacity(cfg, econf.max_len)
+            C = min(econf.prefill_chunk, cap)
+            if cfg.sliding_window is not None:
+                C = min(C, SPEC_MARGIN)
+            while cap % C:
+                C -= 1
+            self._chunk = C
+            n_rows = max(econf.admit_batch, 2)  # >= 2: one parked + one active
+            self.chunk_rows: List[Optional[Request]] = [None] * n_rows
+            self.chunk_cursor: Dict[str, int] = {}
+            self.chunk_cache = self.lane.model.init_cache(n_rows, econf.max_len)
+            model = self.lane.model
+
+            def _chunk_step(cache, params, tokens, lens, n_new, row, last_idx):
+                logits, cache = model.chunk_prefill(params, cache, tokens, lens, n_new)
+                last = jax.lax.dynamic_slice(
+                    logits, (row, last_idx, 0), (1, 1, logits.shape[-1])
+                )[:, 0]
+                return last, cache
+
+            self._chunk_jit = jax.jit(_chunk_step, donate_argnums=(0,))
         # slot state -----------------------------------------------------------
         self.slot_req: List[Optional[Request]] = [None] * econf.max_batch
         # device-resident pending next-token per slot (sampled, not ingested)
@@ -257,6 +307,12 @@ class StreamPair:
     # --------------------------------------------------------------- helpers
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def prefill_in_flight(self) -> int:
+        """Requests parked or active in chunk rows (0 when chunking is off)."""
+        if self._chunk is None:
+            return 0
+        return sum(1 for r in self.chunk_rows if r is not None)
 
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -356,6 +412,115 @@ class StreamPair:
             self.slot_req[slots[i]] = req
             self.histories[slots[i]] = list(req.prompt) + [tok]
             self._spec_reset_slot(slots[i])  # fresh request, fresh EMA
+
+    # --------------------------------------------------------- chunked prefill
+    def _chunk_pull(self, scheduler, now: float) -> None:
+        """Admit queued requests into free chunk rows.
+
+        A row is granted only while every in-flight chunk request can still
+        claim a decode slot at completion (free slots stay strictly above the
+        occupied-row count).  With preemption off the lane runs one request
+        to completion before pulling the next (FIFO service); with it on,
+        arrivals join rows eagerly so EDF can park in-progress work.
+        """
+        wid = self.worker_id
+        while True:
+            free_rows = [r for r, rq in enumerate(self.chunk_rows) if rq is None]
+            occupied = len(self.chunk_rows) - len(free_rows)
+            if not free_rows or len(self.free_slots()) <= occupied:
+                return
+            if not self.econf.prefill_preempt and occupied:
+                return  # run-to-completion: one request in flight at a time
+            req = scheduler.next_for_prefill(wid, now)
+            if req is None:
+                return
+            if not self.reserve_kv(req):
+                scheduler.prefill_queues[wid].appendleft(req)
+                return  # KV pool exhausted — stays queued
+            req.state = RequestState.PREFILLING
+            req.t_prefill_start = now
+            self.chunk_rows[free_rows[0]] = req
+            self.chunk_cursor[req.request_id] = 0
+
+    def _chunk_pick_row(self) -> Optional[int]:
+        """Which row gets this tick's chunk: EDF over occupied rows when
+        preemption is on (ties broken by row index — deterministic), else the
+        single in-flight row."""
+        occ = [(r, rq) for r, rq in enumerate(self.chunk_rows) if rq is not None]
+        if not occ:
+            return None
+        if self.econf.prefill_preempt:
+            return min(occ, key=lambda t: (edf_deadline(t[1]), t[0]))[0]
+        return occ[0][0]
+
+    def chunk_tick(self, scheduler, now: float) -> None:
+        """One prefill-lane tick under chunked prefill (paper's elastic
+        chunk-level execution): pull arrivals, serve ONE fixed-size chunk to
+        the earliest-deadline row, and complete the row into a decode slot
+        when its cursor reaches the prompt end.  The chunk boundary between
+        ticks is the preemption point — a tight-deadline arrival pulled by
+        ``_chunk_pull`` wins the next ``_chunk_pick_row`` and the long
+        prompt's partial KV parks in its row, resumed chunk-aligned."""
+        self._chunk_pull(scheduler, now)
+        row = self._chunk_pick_row()
+        if row is None:
+            return
+        req = self.chunk_rows[row]
+        C = self._chunk
+        R = len(self.chunk_rows)
+        cur = self.chunk_cursor[req.request_id]
+        n = min(C, len(req.prompt) - cur)
+        tokens = np.zeros((R, C), np.int32)
+        tokens[row, :n] = req.prompt[cur : cur + n]
+        lens = np.zeros((R,), np.int32)
+        for r, rq in enumerate(self.chunk_rows):
+            if rq is not None:
+                lens[r] = self.chunk_cursor[rq.request_id]
+        n_new = np.zeros((R,), np.int32)
+        n_new[row] = n
+        last_logits, self.chunk_cache = self._chunk_jit(
+            self.chunk_cache, self.lane.params,
+            jnp.asarray(tokens), jnp.asarray(lens), jnp.asarray(n_new),
+            np.int32(row), np.int32(max(n - 1, 0)),
+        )
+        cur += n
+        self.chunk_cursor[req.request_id] = cur
+        if cur >= len(req.prompt):
+            self._chunk_complete(row, req, last_logits, now)
+
+    def _chunk_complete(self, row: int, req: Request, last_logits, now: float) -> None:
+        """Final chunk done: transfer the row's KV into a free decode slot
+        (the NIXL analogue, same drop-mode insert as batched admission) and
+        sample the first token."""
+        slot = self.free_slots()[0]  # guaranteed by the _chunk_pull budget
+        req.state = RequestState.TRANSFERRING
+        slot_ids = np.full((len(self.chunk_rows),), self.econf.max_batch, np.int32)
+        slot_ids[row] = slot
+        self.lane.insert_rows(jnp.asarray(slot_ids), self.chunk_cache)
+        self.key, sk = jax.random.split(self.key)
+        first = sample(sk, last_logits, self.econf.temperature).astype(jnp.int32)
+        self.pending = self.pending.at[jnp.asarray([slot])].set(first, mode="drop")
+        tok = int(np.asarray(jax.device_get(first))[0])
+        req.state = RequestState.DECODING
+        req.t_prefill_end = now
+        req.t_first_token = now
+        req.output_tokens.append(tok)
+        req.token_times.append(now)
+        self.slot_req[slot] = req
+        self.histories[slot] = list(req.prompt) + [tok]
+        self._spec_reset_slot(slot)
+        self.chunk_rows[row] = None
+        del self.chunk_cursor[req.request_id]
+
+    def chunk_release(self, row: int) -> Request:
+        """Evict a chunk row without completing it (cancel / worker failure).
+        The parked KV is simply abandoned — cursors are host state and the
+        stale cache slots are shadowed by the row's next occupant."""
+        req = self.chunk_rows[row]
+        self.chunk_rows[row] = None
+        self.chunk_cursor.pop(req.request_id, None)
+        self.kv.free_sequence(req.request_id)
+        return req
 
     # ----------------------------------------------------------------- decode
     def decode_iteration(self, now: float) -> int:
@@ -496,14 +661,31 @@ class StreamPair:
         """Pre-compile every steady-state shape bucket (prefill batches,
         verify depths, the plain step) ahead of traffic, then reset the lane.
         Returns the number of distinct programs exercised."""
-        assert not self.active_slots(), \
-            "warmup() resets the decode cache; call it before serving traffic"
+        assert not self.active_slots() and not self.prefill_in_flight(), \
+            "warmup() resets the decode and chunk caches; call it before " \
+            "serving traffic"
         econf = self.econf
         B = econf.max_batch
         key = jax.random.PRNGKey(0)  # throwaway: must not perturb self.key
         n = 0
         prefill_batches: List[Dict[str, Any]] = []
-        if self._bucketed:
+        if self._chunk is not None:
+            # ONE chunk-step program covers every prompt length; also exercise
+            # the completion path (chunk-row insert + single-row sample)
+            R, C = len(self.chunk_rows), self._chunk
+            zeros = jnp.zeros((R,), jnp.int32)
+            last, self.chunk_cache = self._chunk_jit(
+                self.chunk_cache, self.lane.params,
+                jnp.zeros((R, C), jnp.int32), zeros, zeros,
+                np.int32(0), np.int32(0),
+            )
+            self.lane.insert_rows(
+                jnp.full((R,), econf.max_batch, jnp.int32), self.chunk_cache
+            )
+            sample(key, last, econf.temperature)
+            self.chunk_cache = self.lane.model.init_cache(R, econf.max_len)
+            n += 1
+        elif self._bucketed:
             hi = self._bucket(
                 min(max_prompt_len or econf.max_len, econf.max_len), self._len_buckets
             )
@@ -631,27 +813,50 @@ class PipeServeEngine:
             router = resolve_router(router, config=self.econf.router_config)
         self._now = 0.0
         self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
+        self.pairs = [
+            StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
+            for i in range(n_pairs)
+        ]
         # SLO routing prices queued prefill work in engine-tick units via the
-        # cost model, so TTFT slack is comparable with slo_ttft deadlines
+        # cost model, so TTFT slack is comparable with slo_ttft deadlines.
+        # The estimator sees the pairs' EFFECTIVE chunk (None when the arch
+        # gate disabled chunking, clamped otherwise) so chunk-per-tick
+        # pricing matches what the prefill lane actually serves.
         estimator = None
         if self.econf.slo_routing:
             estimator = PrefillDelayEstimator(
                 cfg,
                 max_batch=self.econf.max_batch,
                 mean_context=max(self.econf.max_len // 2, 1),
+                prefill_chunk=self.pairs[0]._chunk,
             )
         self.scheduler = StreamScheduler(
             n_pairs, router, self.monitor,
             slo_routing=self.econf.slo_routing,
             delay_estimator=estimator.ticks if estimator else None,
         )
-        self.pairs = [
-            StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
-            for i in range(n_pairs)
-        ]
+        if any(pair._chunk is not None for pair in self.pairs):
+            # routing must see requests parked in chunk rows: they left the
+            # prefill queue but still owe the lane one tick per chunk left
+            self.scheduler.inflight_depth = (
+                lambda wid: self.pairs[wid].prefill_in_flight()
+            )
+            self.scheduler.inflight_delay = self._chunk_backlog_ticks
 
     def _clock(self) -> float:
         return self._now
+
+    def _chunk_backlog_ticks(self, worker_id: int) -> float:
+        """Remaining chunked-prefill lane turns owed by a pair's chunk rows
+        (one chunk per tick), priced into the scheduler's queue delay."""
+        pair = self.pairs[worker_id]
+        if pair._chunk is None:
+            return 0.0
+        C = pair._chunk
+        return float(sum(
+            -(-(len(req.prompt) - pair.chunk_cursor.get(req.request_id, 0)) // C)
+            for req in pair.chunk_rows if req is not None
+        ))
 
     # ----------------------------------------------------------------- driving
     def submit(self, req: Request) -> int:
@@ -683,6 +888,19 @@ class PipeServeEngine:
                     _terminal_record(req, self._now, cancelled=True)
                 )
                 return True
+            # mid-chunked-prefill (parked or active chunk row)
+            if pair._chunk is None:
+                continue
+            for row, req in enumerate(pair.chunk_rows):
+                if req is None or req.request_id != request_id:
+                    continue
+                pair.chunk_release(row)
+                req.state = RequestState.CANCELLED
+                req.t_end = self._now
+                self.monitor.complete_request(
+                    _terminal_record(req, self._now, cancelled=True)
+                )
+                return True
         return False
 
     def fail_worker(self, worker_id: int) -> int:
@@ -692,6 +910,7 @@ class PipeServeEngine:
         pair = self.pairs[worker_id]
         pair.healthy = False
         rerouted = self.scheduler.mark_unhealthy(worker_id, self._now)
+        orphans: List[Request] = []
         for slot, req in enumerate(pair.slot_req):
             if req is None:
                 continue
@@ -699,12 +918,18 @@ class PipeServeEngine:
             pair.histories[slot] = []
             pair._spec_reset_slot(slot)
             pair.kv.free_sequence(req.request_id)
+            orphans.append(req)
+        if pair._chunk is not None:
+            for row, req in enumerate(pair.chunk_rows):
+                if req is not None:
+                    orphans.append(pair.chunk_release(row))
+        for req in orphans:
             req.output_tokens.clear()
             req.token_times.clear()
             req.spec_depths.clear()
             req.state = RequestState.QUEUED
-            self.scheduler.submit(req, self._now)
-            rerouted += 1
+            # FAILED with a terminal record when this was the last worker
+            rerouted += self.scheduler.resubmit_or_fail(req, self._now)
         return rerouted
 
     def step(self) -> int:
@@ -715,40 +940,60 @@ class PipeServeEngine:
             if not pair.healthy:
                 continue
             wid = pair.worker_id
-            # stall-free admission: fill free slots from the queue, fusing up
-            # to admit_cap() reserved requests into one bucketed prefill call
-            while True:
-                free = pair.free_slots()
-                cap = min(len(free), pair.admit_cap())
-                batch: List[Request] = []
-                blocked = False
-                while len(batch) < cap:
-                    req = self.scheduler.next_for_prefill(wid, self._now)
-                    if req is None:
+            if pair._chunk is not None:
+                # chunked prefill: one fixed-size chunk per tick, preemptible
+                # at the chunk boundary (EDF over in-progress rows + queue)
+                pair.chunk_tick(self.scheduler, self._now)
+            else:
+                # stall-free admission: fill free slots from the queue, fusing
+                # up to admit_cap() reserved requests into one bucketed
+                # prefill call
+                while True:
+                    free = pair.free_slots()
+                    cap = min(len(free), pair.admit_cap())
+                    batch: List[Request] = []
+                    blocked = False
+                    while len(batch) < cap:
+                        req = self.scheduler.next_for_prefill(wid, self._now)
+                        if req is None:
+                            break
+                        if not pair.reserve_kv(req):
+                            self.scheduler.prefill_queues[wid].appendleft(req)
+                            blocked = True
+                            break
+                        batch.append(req)
+                    if batch:
+                        pair.admit(batch, self._now)
+                    if blocked or not batch:
                         break
-                    if not pair.reserve_kv(req):
-                        self.scheduler.prefill_queues[wid].appendleft(req)
-                        blocked = True
-                        break
-                    batch.append(req)
-                if batch:
-                    pair.admit(batch, self._now)
-                if blocked or not batch:
-                    break
             n = pair.decode_iteration(self._now)
             emitted += n
             self.monitor.record_tokens(wid, n, self._now)
             pair.publish_metrics(self.scheduler.queue_depth(wid))
         return emitted
 
+    def drained(self) -> bool:
+        """True when nothing is queued, mid-chunked-prefill, or decoding."""
+        return self.scheduler.pending_total() == 0 and all(
+            not p.active_slots() and not p.prefill_in_flight()
+            for p in self.pairs if p.healthy
+        )
+
     def run_until_done(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if self.scheduler.pending_total() == 0 and all(
-                not p.active_slots() for p in self.pairs if p.healthy
-            ):
+            if self.drained():
                 return
             self.step()
         raise RuntimeError("engine did not drain within max_steps")
+
+    def chunk_progress(self) -> Dict[str, int]:
+        """Per-request chunked-prefill cursors (tokens ingested so far) across
+        all pairs — the observability handle for parked partial prefills."""
+        out: Dict[str, int] = {}
+        for pair in self.pairs:
+            if pair._chunk is not None:
+                out.update(pair.chunk_cursor)
+        return out
 
     # ------------------------------------------------------------ warmup/perf
     def warmup(self, max_prompt_len: Optional[int] = None) -> int:
@@ -779,6 +1024,12 @@ class PipeServeEngine:
                 sizes[tag + "prefill"] = lane._prefill._cache_size()
                 sizes[tag + "decode"] = lane._decode._cache_size()
                 sizes[tag + "commit"] = lane._commit._cache_size()
+            if pair._chunk is not None:
+                # the chunked-prefill contract: exactly ONE compiled prefill
+                # program regardless of prompt length
+                sizes[f"pair{pair.worker_id}.chunk_prefill"] = (
+                    pair._chunk_jit._cache_size()
+                )
         return sizes
 
     def jit_cache_total(self) -> int:

@@ -37,8 +37,13 @@ class Router(Protocol):
                queue_delays=None) -> Tuple[int, Dict[int, float]]: ...
 
 
-def _deadline(req: Request) -> float:
-    """EDF key: absolute TTFT deadline; best-effort requests sort last."""
+def edf_deadline(req: Request) -> float:
+    """EDF key: absolute TTFT deadline; best-effort requests sort last.
+
+    Shared with the engine's chunked-prefill preemption: a partially
+    prefilled request is parked when a queued arrival carries an earlier
+    deadline, so both sides must rank by the same key.
+    """
     if req.slo_ttft is None:
         return math.inf
     return (req.arrival_time or 0.0) + req.slo_ttft
@@ -63,6 +68,12 @@ class StreamScheduler:
         self.slo_routing = slo_routing
         self.delay_estimator = delay_estimator
         self.shed: List[Request] = []
+        # chunked-prefill hooks (wired by the engine): requests parked in a
+        # pair's chunk rows have left the prefill queue but still occupy the
+        # prefill lane for ceil(remaining / chunk) ticks — routing signals
+        # that ignored them would see a saturated lane as idle
+        self.inflight_depth: Optional[Callable[[int], int]] = None
+        self.inflight_delay: Optional[Callable[[int], float]] = None
         # routers predating the SLO plumbing (custom plugins) keep working:
         # only pass the extra kwargs to routers that declare them
         self._router_slo_aware = self._accepts_slo_kwargs(self.router)
@@ -83,16 +94,22 @@ class StreamScheduler:
 
     # ---------------------------------------------------------------- routing
     def queue_delay(self, worker_id: int) -> float:
-        """Estimated ticks of prefill service sitting in a worker's queue."""
+        """Estimated ticks of prefill service ahead of a new arrival: queued
+        requests plus the in-flight chunked-prefill backlog (parked partials
+        still owed lane turns)."""
         if self.delay_estimator is None:
-            return float(len(self.prefill_queues[worker_id]))
-        return sum(self.delay_estimator(r) for r in self.prefill_queues[worker_id])
+            delay = float(len(self.prefill_queues[worker_id]))
+        else:
+            delay = sum(self.delay_estimator(r) for r in self.prefill_queues[worker_id])
+        if self.inflight_delay is not None:
+            delay += self.inflight_delay(worker_id)
+        return delay
 
     def submit(self, req: Request, now: float) -> int:
         healthy = [i for i, ok in self.healthy.items() if ok]
         # FlowGuard reads queue depth live (Alg 2: fresh values)
         for i in healthy:
-            self.monitor.update_worker(i, queue_depth=len(self.prefill_queues[i]))
+            self.monitor.update_worker(i, queue_depth=self.queue_depth(i))
         if self.slo_routing and self._router_slo_aware:
             delays = {i: self.queue_delay(i) for i in healthy}
             worker, _ = self.router.select(
@@ -121,39 +138,50 @@ class StreamScheduler:
         while q:
             if not self.slo_routing:
                 return q.popleft()
-            idx = min(range(len(q)), key=lambda i: _deadline(q[i]))
+            idx = min(range(len(q)), key=lambda i: edf_deadline(q[i]))
             req = q[idx]
             del q[idx]
             # slack already negative: the deadline passed while queued, so
             # even immediate service (this very tick) can only miss
-            if now is not None and req.slo_ttft is not None and now > _deadline(req):
+            if now is not None and req.slo_ttft is not None and now > edf_deadline(req):
                 self._shed(req, now)
                 continue
             return req
         return None
 
-    def _shed(self, req: Request, now: float) -> None:
-        """Admission guard: fail an SLO-infeasible request terminally."""
+    def fail_request(self, req: Request, now: float, reason: str,
+                     slo_infeasible: bool = False) -> None:
+        """Terminal failure with a RequestRecord — a request must never
+        vanish without a record, whatever path killed it."""
         req.state = RequestState.FAILED
-        req.error = "slo_infeasible"
+        req.error = reason
         req.t_end = now
-        self.shed.append(req)
         self.monitor.complete_request(
             RequestRecord(
                 request_id=req.request_id,
                 t_start=req.arrival_time or 0.0,
                 t_end=now,
                 prompt_len=req.prompt_len,
-                generated=0,
+                generated=len(req.output_tokens),
+                token_times=list(req.token_times),
                 worker_id=req.worker_id,
                 slo_ttft=req.slo_ttft,
                 slo_tpot=req.slo_tpot,
-                slo_infeasible=True,
+                slo_infeasible=slo_infeasible,
             )
         )
 
+    def _shed(self, req: Request, now: float) -> None:
+        """Admission guard: fail an SLO-infeasible request terminally."""
+        self.shed.append(req)
+        self.fail_request(req, now, "slo_infeasible", slo_infeasible=True)
+
     def queue_depth(self, worker_id: int) -> int:
-        return len(self.prefill_queues[worker_id])
+        """Queued requests plus any parked mid-chunked-prefill on the pair."""
+        depth = len(self.prefill_queues[worker_id])
+        if self.inflight_depth is not None:
+            depth += self.inflight_depth(worker_id)
+        return depth
 
     def cancel(self, request_id: str) -> Optional[Request]:
         """Drop a still-queued request.  Returns it, or None if not queued."""
@@ -165,15 +193,27 @@ class StreamScheduler:
         return None
 
     # ---------------------------------------------------------- fault handling
+    def resubmit_or_fail(self, req: Request, now: float) -> bool:
+        """Re-route an orphaned request, or — when no healthy worker remains
+        to take it — FAIL it terminally with a RequestRecord.  ``submit()``
+        raising mid-loop used to drop the remaining orphans silently."""
+        if any(self.healthy.values()):
+            self.submit(req, now)
+            return True
+        self.fail_request(req, now, "no_healthy_workers")
+        return False
+
     def mark_unhealthy(self, worker_id: int, now: float) -> int:
         """Worker died / is draining: exclude from routing and re-route its
-        queued requests.  Returns how many requests were re-routed."""
+        queued requests (FAILED with ``error="no_healthy_workers"`` when it
+        was the last worker).  Returns how many requests were re-routed."""
         self.healthy[worker_id] = False
         orphans = list(self.prefill_queues[worker_id])
         self.prefill_queues[worker_id].clear()
+        rerouted = 0
         for req in orphans:
-            self.submit(req, now)
-        return len(orphans)
+            rerouted += self.resubmit_or_fail(req, now)
+        return rerouted
 
     def mark_healthy(self, worker_id: int) -> None:
         self.healthy[worker_id] = True

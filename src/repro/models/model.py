@@ -5,6 +5,7 @@ A :class:`Model` bundles pure functions:
 ``init(key)``                                -> P-leaf param tree
 ``loss_fn(params, batch)``                   -> (loss, metrics)      [train]
 ``prefill(params, batch, max_len)``          -> (last_logits, cache)
+``chunk_prefill(params, cache, tokens, lens, n_new)`` -> (logits, cache')
 ``decode_step(params, cache, tokens)``       -> (logits, cache')     [T >= 1]
 ``commit_cache(cache', accept_idx)``         -> canonical cache      [rollback]
 ``init_cache(batch, max_len)``               -> canonical cache shapes
@@ -37,6 +38,7 @@ class Model:
     loss_fn: Callable[..., Tuple[jax.Array, Dict]]
     forward: Callable[..., jax.Array]
     prefill: Callable[..., Tuple[jax.Array, Any]]
+    chunk_prefill: Callable[..., Tuple[jax.Array, Any]]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
     commit_cache: Callable[..., Any]
     init_cache: Callable[..., Any]
@@ -203,6 +205,34 @@ def build_model(cfg: ArchConfig) -> Model:
             cache["mem_len"] = mem_len
         return logits.astype(jnp.float32), cache
 
+    # ---------------------------------------------------------- chunked prefill
+    def chunk_prefill(params, cache, tokens: jax.Array, lens: jax.Array,
+                      n_new: jax.Array):
+        """One fixed-size chunked-prefill step (one compiled shape total).
+
+        ``tokens`` (B, C) holds up to C prompt tokens per row; ``lens`` (B,)
+        is each row's running cursor (tokens already ingested — the caller's
+        host-tracked source of truth, overriding ``cache["len"]`` so parked
+        rows can be recycled without a device reset); ``n_new`` (B,) is how
+        many of the C tokens are real this step (0 = idle row).  Positions
+        are ``lens``-offset, so a prompt of any length is ingested as
+        ceil(len / C) identical (B, C) steps — XLA compiles exactly one
+        prefill program regardless of prompt length.
+
+        Padded positions (>= n_new) are written then rewound: the cache
+        length advances by ``n_new`` only, and the positional decode mask
+        (slot position <= query position) keeps the stale slots unreachable
+        until the real token at that position overwrites them — the same
+        shadowing discipline speculative rollback relies on.  Attention-only
+        stacks (callers gate on the architecture, like bucketed prefill).
+        """
+        cache = dict(cache, len=lens.astype(jnp.int32))
+        logits, cache = decode_step(params, cache, tokens)
+        # rewind: len = lens + n_new (commit keeps tokens [0, n_new) per row)
+        cache = commit_cache(cache, lens.astype(jnp.int32),
+                             n_new.astype(jnp.int32) - 1)
+        return logits, cache
+
     # ------------------------------------------------------------ decode step
     def decode_step(params, cache, tokens: jax.Array):
         """tokens: (B, T) — T = 1 (plain) or draft_depth+1 (spec verify)."""
@@ -236,6 +266,7 @@ def build_model(cfg: ArchConfig) -> Model:
         loss_fn=loss_fn,
         forward=forward,
         prefill=prefill,
+        chunk_prefill=chunk_prefill,
         decode_step=decode_step,
         commit_cache=commit_cache,
         init_cache=init_cache,

@@ -22,6 +22,7 @@ Every op cost is ``max(compute_time, memory_time) + dispatch_overhead``
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.configs.base import ArchConfig
 
@@ -141,6 +142,39 @@ class CostModel:
             + self.hw.dispatch_overhead
         )
 
+    def chunked_prefill_time(self, prompt_len: int, chunk: int,
+                             cached_tokens: int = 0) -> float:
+        """Prefill served as ceil(L / chunk) fixed-size chunk steps.
+
+        Each chunk streams the weights again and attends to the full running
+        prefix (the quadratic term accumulates across chunks exactly as in
+        one-shot prefill), so the overhead of chunking is the per-chunk
+        dispatch + weight re-stream — the price of preemptibility that
+        DistServe/DynaServe-style schedulers pay for chunk-level elasticity.
+        """
+        live = max(prompt_len - cached_tokens, 0)
+        if live == 0:
+            return self.hw.dispatch_overhead
+        chunk = max(chunk, 1)
+        attn_heads = self.cfg.n_heads * self.cfg.head_dim
+        n_attn = sum(1 for k in self.cfg.layer_kinds() if k == "attn")
+        weight_stream = (self.n_active * self.dtype_bytes) / self.mem_rate
+        total = 0.0
+        done = 0
+        while done < live:
+            n = min(chunk, live - done)
+            flops = 2.0 * self.n_active * n
+            # chunk queries attend to the prefix ingested so far + themselves
+            flops += 4.0 * n_attn * n * max(done + n, 1) * attn_heads / 2
+            t_compute = flops / self.flops_rate
+            total += (
+                max(t_compute, weight_stream)
+                + self.tp_comm_time(n)
+                + self.hw.dispatch_overhead
+            )
+            done += n
+        return total
+
     def decode_step_time(self, batch: int, mean_context: float, t_tokens: int = 1) -> float:
         """One decode (or speculative-verify) iteration over a batch.
 
@@ -194,12 +228,20 @@ class PrefillDelayEstimator:
     """
 
     def __init__(self, cfg: ArchConfig, hw: HardwareProfile = TPU_V5E,
-                 max_batch: int = 8, mean_context: int = 256):
+                 max_batch: int = 8, mean_context: int = 256,
+                 prefill_chunk: Optional[int] = None):
         self.cost = CostModel(cfg, hw=hw)
         self.tick_s = self.cost.decode_step_time(max_batch, max(mean_context, 1))
+        self.prefill_chunk = prefill_chunk
 
     def ticks(self, req) -> float:
         """Estimated service ticks to prefill one queued request.
+
+        With chunked prefill (``prefill_chunk``) the engine's prefill lane
+        serves exactly ONE chunk per tick, so service time is quantised at
+        ceil(prompt / chunk) ticks — the long/short asymmetry the EDF
+        preemption exploits, and the quantity FlowGuard's queue-delay
+        estimate must reflect for its TTFT-slack scores to stay honest.
 
         Memoised on the request (its prompt never changes while queued), so
         re-scoring a deep queue on every submission stays O(queue) additions
@@ -209,8 +251,12 @@ class PrefillDelayEstimator:
         if cached is not None:
             return cached
         plen = len(req.prompt)
-        t = self.cost.prefill_time(plen, getattr(req, "cache_hit_tokens", 0))
-        t += self.cost.kv_transfer_time(plen)
-        t = max(t / self.tick_s, 1.0)
+        if self.prefill_chunk:
+            # chunk-per-tick service quantisation dominates any sub-tick cost
+            t = float(max(-(-plen // self.prefill_chunk), 1))
+        else:
+            t = self.cost.prefill_time(plen, getattr(req, "cache_hit_tokens", 0))
+            t += self.cost.kv_transfer_time(plen)
+            t = max(t / self.tick_s, 1.0)
         req._prefill_ticks = t
         return t

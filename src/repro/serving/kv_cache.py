@@ -12,25 +12,34 @@ truth for M_w (memory utilisation) and C_w (prefix reuse).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import zlib
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
 class Block:
     block_id: int
     ref_count: int = 0
-    # content hash chain for prefix sharing: hash of (parent_hash, tokens)
+    # content hash chain for prefix sharing: crc32 of (parent_hash, tokens)
     content_hash: Optional[int] = None
 
 
 class BlockPool:
-    """Fixed-capacity block allocator with refcounts and LRU-free eviction."""
+    """Fixed-capacity block allocator with refcounts and a FIFO free list.
+
+    Freed blocks are recycled oldest-freed-first.  ``release()`` drops the
+    content hash, so freed contents are never resurrectable either way —
+    FIFO is about deterministic, fair recycling order (and matching what
+    this docstring used to call "LRU-free eviction" while ``list.pop()``
+    actually delivered LIFO).
+    """
 
     def __init__(self, n_blocks: int, block_size: int = 16):
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.blocks = [Block(i) for i in range(n_blocks)]
-        self.free: List[int] = list(range(n_blocks))
+        self.free: Deque[int] = deque(range(n_blocks))
         self.hash_index: Dict[int, int] = {}  # content_hash -> block_id
 
     # ------------------------------------------------------------- alloc
@@ -43,7 +52,7 @@ class BlockPool:
             return bid
         if not self.free:
             return None
-        bid = self.free.pop()
+        bid = self.free.popleft()  # FIFO: reuse the oldest-freed block
         b = self.blocks[bid]
         b.ref_count = 1
         b.content_hash = content_hash
@@ -75,11 +84,22 @@ class BlockPool:
 
 
 def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
-    """Content-hash chain of full blocks of ``tokens`` (prefix identity)."""
+    """Content-hash chain of full blocks of ``tokens`` (prefix identity).
+
+    crc32 over the little-endian bytes of (parent_hash, *block) — NOT the
+    builtin ``hash()``, which PYTHONHASHSEED randomises per process and
+    which therefore made prefix-block sharing (and the C_w hit-rate signal
+    FlowGuard routes on) nondeterministic across processes.  32-bit
+    collisions are acceptable for a cache-reuse signal.
+    """
     out: List[int] = []
     parent = 0
     for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
-        parent = hash((parent, tuple(tokens[i : i + block_size])))
+        data = b"".join(
+            int(t).to_bytes(8, "little", signed=True)
+            for t in (parent, *tokens[i : i + block_size])
+        )
+        parent = zlib.crc32(data)
         out.append(parent)
     return out
 
@@ -132,9 +152,12 @@ class KVCacheManager:
             return None
         alloc = SequenceAllocation(request_id, got, len(tokens), shared)
         self.seqs[request_id] = alloc
-        prompt_blocks = max(len(hashes), 1)
-        hit = min(shared / prompt_blocks, 1.0)
-        self.hit_rate = self._hit_ema * self.hit_rate + (1 - self._hit_ema) * hit
+        # prompts shorter than one block can never share a prefix block —
+        # scoring them hit=0 would drag the EMA down on workloads that have
+        # no sharing opportunity at all, so they simply don't vote
+        if hashes:
+            hit = min(shared / len(hashes), 1.0)
+            self.hit_rate = self._hit_ema * self.hit_rate + (1 - self._hit_ema) * hit
         return alloc
 
     def extend_sequence(self, request_id: str, n_new_tokens: int) -> bool:

@@ -268,13 +268,14 @@ class ServeSimulator:
         sim = self._sim_by_id[rid]
         req = sim.request
         if not w.healthy:
-            # worker died mid-prefill: restart the request elsewhere
+            # worker died mid-prefill: restart the request elsewhere (FAILED
+            # with a record when no healthy worker remains to take it)
             w.kv.free_sequence(rid)
             req.output_tokens.clear()
             req.token_times.clear()
             req.state = RequestState.QUEUED
-            wid2 = self.scheduler.submit(req, self.now)
-            self._maybe_start_prefill(wid2)
+            if self.scheduler.resubmit_or_fail(req, self.now):
+                self._maybe_start_prefill(req.worker_id)
             return
         req.state = RequestState.TRANSFERRING
         req.t_prefill_end = self.now
@@ -400,8 +401,9 @@ class ServeSimulator:
             req.output_tokens.clear()
             req.token_times.clear()
             req.state = RequestState.QUEUED
-            wid2 = self.scheduler.submit(req, self.now)
-            self._maybe_start_prefill(wid2)
+            # last worker down: FAIL with a record instead of raising mid-loop
+            if self.scheduler.resubmit_or_fail(req, self.now):
+                self._maybe_start_prefill(req.worker_id)
 
 
 # ---------------------------------------------------------------------------

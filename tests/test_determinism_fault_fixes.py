@@ -1,0 +1,126 @@
+"""Determinism and fault-path bugfix regressions (no hypothesis needed, so
+these run everywhere — the property-test modules skip without it):
+
+* ``chain_hashes`` must be stable across processes (builtin ``hash()`` is
+  randomised by PYTHONHASHSEED, which made prefix-block sharing and the C_w
+  hit-rate signal nondeterministic).
+* ``BlockPool`` free-list reuse is FIFO (oldest-freed first), and prompts
+  shorter than one block don't vote on the hit-rate EMA.
+* ``StreamScheduler.mark_unhealthy`` on the LAST worker fails its orphans
+  cleanly with RequestRecords instead of raising mid-loop and silently
+  dropping the rest.
+"""
+import os
+import subprocess
+import sys
+
+from repro.core.flowguard import FlowGuard
+from repro.core.scheduler import StreamScheduler
+from repro.serving.kv_cache import BlockPool, KVCacheManager, chain_hashes
+from repro.serving.request import Request, RequestState, SamplingParams
+
+REPO_ROOT = __file__.rsplit("/tests/", 1)[0]
+
+
+def test_chain_hashes_deterministic_across_processes():
+    code = (
+        "import sys; sys.path.insert(0, 'src'); "
+        "from repro.serving.kv_cache import chain_hashes; "
+        "print(chain_hashes(list(range(40)), 8))"
+    )
+    outs = set()
+    for seed in ("0", "1", "12345"):
+        r = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, check=True,
+            env={**os.environ, "PYTHONHASHSEED": seed},
+            cwd=REPO_ROOT,
+        )
+        outs.add(r.stdout.strip())
+    assert len(outs) == 1, f"hash chain varies across processes: {outs}"
+    # and the in-process chain matches what the subprocesses computed
+    assert str(chain_hashes(list(range(40)), 8)) == outs.pop()
+
+
+def test_chain_hashes_prefix_property_survives_crc():
+    t1 = list(range(32))
+    t2 = list(range(16)) + [99] * 16
+    h1, h2 = chain_hashes(t1, 8), chain_hashes(t2, 8)
+    assert h1[:2] == h2[:2]  # shared 16-token prefix -> same chain head
+    assert h1[2:] != h2[2:]
+
+
+def test_block_pool_free_list_is_fifo():
+    """Freed blocks are reused oldest-first (deterministic fair recycling,
+    matching the docstring; a bare list.pop() was LIFO)."""
+    pool = BlockPool(4)
+    ids = [pool.allocate() for _ in range(4)]
+    for b in ids:
+        pool.release(b)
+    assert [pool.allocate() for _ in range(4)] == ids  # FIFO, not reversed
+
+
+def test_short_prompt_does_not_vote_on_hit_ema():
+    """Prompts shorter than one block have no full prompt block to share —
+    they must leave the hit-rate EMA untouched instead of dragging it down."""
+    kv = KVCacheManager(64, block_size=16)
+    before = kv.hit_rate
+    kv.allocate_sequence("tiny", list(range(5)), extra_tokens=0)
+    assert kv.hit_rate == before
+    # a full-block prompt still moves the EMA
+    kv.allocate_sequence("full", list(range(16)), extra_tokens=0)
+    assert kv.hit_rate != before
+
+
+def _req(n=8):
+    return Request(prompt=list(range(n)), params=SamplingParams(max_new_tokens=4))
+
+
+def test_last_worker_death_fails_orphans_with_records():
+    s = StreamScheduler(1, FlowGuard())
+    reqs = [_req() for _ in range(4)]
+    for r in reqs:
+        s.submit(r, now=0.0)
+    moved = s.mark_unhealthy(0, now=1.0)  # no survivor to re-route to
+    assert moved == 0
+    assert s.pending_total() == 0
+    assert all(r.state == RequestState.FAILED for r in reqs)
+    assert all(r.error == "no_healthy_workers" for r in reqs)
+    recorded = {rec.request_id for rec in s.monitor.completed}
+    assert recorded == {r.request_id for r in reqs}
+    # the records are plain failures, not SLO sheds
+    assert not any(rec.slo_infeasible for rec in s.monitor.completed)
+
+
+def test_simulator_all_workers_dead_fails_orphans_cleanly():
+    """The simulator's failure handler shares resubmit_or_fail: killing
+    every worker mid-flight must not raise, and every request must end in
+    a terminal record (completed or failed) — none vanish."""
+    from repro.configs import reduced_config
+    from repro.data.workloads import sample_requests
+    from repro.serving.simulator import ServeSimulator, streamserve_config
+
+    cfg = reduced_config("qwen3-1.7b")
+    sim = ServeSimulator(cfg, streamserve_config())
+    sim.inject_failure(0.02, wid=0)
+    sim.inject_failure(0.03, wid=1)
+    reqs = sample_requests("gsm8k", 10, seed=3, arrival_rate=500.0)
+    sim.run(reqs)  # raised RuntimeError mid-loop before the fix
+    recorded = {rec.request_id for rec in sim.monitor.completed}
+    assert recorded == {r.request.request_id for r in reqs}
+    failed = [r.request for r in reqs if r.request.error == "no_healthy_workers"]
+    assert failed, "expected at least one orphan failed by the dead cluster"
+
+
+def test_two_worker_death_reroutes_then_fails():
+    """First death re-routes to the survivor; second death fails cleanly."""
+    s = StreamScheduler(2, FlowGuard())
+    reqs = [_req() for _ in range(4)]
+    for r in reqs:
+        s.submit(r, now=0.0)
+    s.mark_unhealthy(0, now=1.0)
+    assert s.queue_depth(0) == 0 and s.queue_depth(1) == 4
+    moved = s.mark_unhealthy(1, now=2.0)
+    assert moved == 0 and s.pending_total() == 0
+    assert all(r.error == "no_healthy_workers" for r in reqs)
+    assert len(s.monitor.completed) == 4
