@@ -234,7 +234,8 @@ def main(argv=None) -> int:
     cfg = dataclasses.replace(reduced_config("qwen3-1.7b"), n_layers=2)
     model = build_model(cfg)
     params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
-    base = dict(max_batch=4, max_len=max_len, kv_blocks=4096, kv_block_size=16)
+    base = {"max_batch": 4, "max_len": max_len, "kv_blocks": 4096,
+            "kv_block_size": 16}
 
     def trace(name: str):
         if name == "mixed":

@@ -193,9 +193,10 @@ def concurrency_sweep(
                 mk(), "gsm8k", arrival_rate=None, n=4 * c, seed=c,
             )
             rows.append(
-                dict(concurrency=c, latency_p50=s["latency_p50"],
-                     latency_p99=s["latency_p99"], latency_mean=s["latency_mean"],
-                     aggregate_tput=s["aggregate_tput"])
+                {"concurrency": c, "latency_p50": s["latency_p50"],
+                 "latency_p99": s["latency_p99"],
+                 "latency_mean": s["latency_mean"],
+                 "aggregate_tput": s["aggregate_tput"]}
             )
         out[sys_name] = rows
     return out

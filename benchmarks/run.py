@@ -27,7 +27,7 @@ def serve_smoke() -> dict:
     serve = StreamServe(cfg)
     rng = np.random.default_rng(0)
     shared = rng.integers(0, serve.arch.vocab_size, 8).tolist()
-    t0 = time.time()
+    t0 = time.perf_counter()
     handles = [
         serve.submit(shared + rng.integers(0, serve.arch.vocab_size, 8).tolist())
         for _ in range(8)
@@ -36,9 +36,9 @@ def serve_smoke() -> dict:
         serve.step()
     late = serve.submit(shared + rng.integers(0, serve.arch.vocab_size, 8).tolist())
     handles[-1].cancel()
-    for h in handles[:-1] + [late]:
+    for h in [*handles[:-1], late]:
         h.result()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     s = serve.summary()
     print(f"  {int(s['n'])} requests (1 mid-run, 1 cancelled) in {wall:.1f}s wall")
     print(f"  logical latency mean={s['latency_mean']:.1f} ticks  "
@@ -57,7 +57,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     run_all = not (args.tables or args.roofline or args.serve)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if run_all or args.serve:
         print("=" * 70)
         print("LIVE SERVING SMOKE (StreamServe API, real JAX engine)")
@@ -80,7 +80,7 @@ def main(argv=None) -> int:
 
         paper_tables.run_all()
 
-    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    print(f"\nall benchmarks done in {time.perf_counter()-t0:.0f}s")
     return 0
 
 

@@ -182,11 +182,11 @@ class ServeConfig:
     @classmethod
     def reduced_smoke(cls, arch: str = "qwen3-1.7b", **overrides) -> "ServeConfig":
         """Tiny CPU configuration: every test/example/CI entry point."""
-        base = dict(
-            arch=arch, reduced=True, n_layers=2, n_pairs=2,
-            max_batch=3, max_len=96, max_new_tokens=12,
-            kv_blocks=1024, kv_block_size=8,
-        )
+        base = {
+            "arch": arch, "reduced": True, "n_layers": 2, "n_pairs": 2,
+            "max_batch": 3, "max_len": 96, "max_new_tokens": 12,
+            "kv_blocks": 1024, "kv_block_size": 8,
+        }
         base.update(overrides)
         return cls(**base)
 
@@ -194,10 +194,11 @@ class ServeConfig:
     def paper_stream_pairs(cls, arch: str = "qwen3-1.7b", **overrides) -> "ServeConfig":
         """The paper's §4 operating point: 2 stream pairs, FlowGuard +
         SpecuStream, full-size model (TPU/GPU scale)."""
-        base = dict(
-            arch=arch, reduced=False, n_pairs=2,
-            max_batch=16, max_len=2048, max_new_tokens=512, kv_blocks=8192,
-        )
+        base = {
+            "arch": arch, "reduced": False, "n_pairs": 2,
+            "max_batch": 16, "max_len": 2048, "max_new_tokens": 512,
+            "kv_blocks": 8192,
+        }
         base.update(overrides)
         return cls(**base)
 
@@ -205,10 +206,11 @@ class ServeConfig:
     def ablation_fixed_depth(cls, depth: int, arch: str = "qwen3-1.7b",
                              **overrides) -> "ServeConfig":
         """Table 8/9 ablation row: fixed speculation depth (0 disables)."""
-        base = dict(
-            arch=arch, spec_policy="fixed" if depth > 0 else "none",
-            fixed_depth=max(depth, 0), draft="ngram" if depth > 0 else "none",
-        )
+        base = {
+            "arch": arch, "spec_policy": "fixed" if depth > 0 else "none",
+            "fixed_depth": max(depth, 0),
+            "draft": "ngram" if depth > 0 else "none",
+        }
         base.update(overrides)
         return cls.reduced_smoke(**base) if base.get("reduced", True) else cls(**base)
 
@@ -260,19 +262,19 @@ class ServeConfig:
         """Map to the discrete-event simulator's SimConfig (benchmark path)."""
         from repro.serving.simulator import SimConfig
 
-        base = dict(
-            mode="streamserve",
-            n_workers=self.n_pairs,
-            router=self.router,
-            speculative=self.draft != "none" and self.spec_policy != "none",
-            adaptive=self.spec_policy == "specustream",
-            fixed_depth=self.fixed_depth,
-            max_batch=self.max_batch,
-            kv_blocks=self.kv_blocks,
-            kv_block_size=self.kv_block_size,
-            spec_config=self.spec,
-            flowguard_config=self.flowguard,
-            seed=self.seed,
-        )
+        base = {
+            "mode": "streamserve",
+            "n_workers": self.n_pairs,
+            "router": self.router,
+            "speculative": self.draft != "none" and self.spec_policy != "none",
+            "adaptive": self.spec_policy == "specustream",
+            "fixed_depth": self.fixed_depth,
+            "max_batch": self.max_batch,
+            "kv_blocks": self.kv_blocks,
+            "kv_block_size": self.kv_block_size,
+            "spec_config": self.spec,
+            "flowguard_config": self.flowguard,
+            "seed": self.seed,
+        }
         base.update(overrides)
         return SimConfig(**base)

@@ -67,13 +67,13 @@ def get_config(name: str) -> ArchConfig:
 def reduced_config(name: str) -> ArchConfig:
     """Tiny same-family variant for CPU smoke tests (shapes only, no realism)."""
     cfg = get_config(name)
-    kw: dict = dict(
-        n_layers=min(cfg.n_layers, 4),
-        d_model=128,
-        vocab_size=512,
-        head_dim=32,
-        scan_block=1,
-    )
+    kw: dict = {
+        "n_layers": min(cfg.n_layers, 4),
+        "d_model": 128,
+        "vocab_size": 512,
+        "head_dim": 32,
+        "scan_block": 1,
+    }
     if cfg.family == "ssm":
         kw.update(n_heads=0, n_kv_heads=0, d_ff=0)
     else:

@@ -410,7 +410,7 @@ class StreamPair:
             req.output_tokens.append(tok)
             req.token_times.append(now)
             self.slot_req[slots[i]] = req
-            self.histories[slots[i]] = list(req.prompt) + [tok]
+            self.histories[slots[i]] = [*req.prompt, tok]
             self._spec_reset_slot(slots[i])  # fresh request, fresh EMA
 
     # --------------------------------------------------------- chunked prefill
@@ -507,7 +507,7 @@ class StreamPair:
         req.output_tokens.append(tok)
         req.token_times.append(now)
         self.slot_req[slot] = req
-        self.histories[slot] = list(req.prompt) + [tok]
+        self.histories[slot] = [*req.prompt, tok]
         self._spec_reset_slot(slot)
         self.chunk_rows[row] = None
         del self.chunk_cursor[req.request_id]
@@ -622,7 +622,7 @@ class StreamPair:
 
         emitted = 0
         for s in active:
-            toks = [int(t) for t in draft_np[s, : int(n_acc[s])]] + [int(nxt[s])]
+            toks = [*(int(t) for t in draft_np[s, : int(n_acc[s])]), int(nxt[s])]
             emitted += self._emit(s, toks, now)
         return emitted
 

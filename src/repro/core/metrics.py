@@ -68,7 +68,7 @@ class RequestRecord:
         """Eq 18: mean inter-token time over generated tokens."""
         if len(self.token_times) < 2:
             return 0.0
-        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:], strict=False)]
         return sum(gaps) / len(gaps)
 
     @property

@@ -19,9 +19,9 @@ class ByteTokenizer:
     def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
         ids = list(text.encode("utf-8"))
         if bos:
-            ids = [self.BOS] + ids
+            ids = [self.BOS, *ids]
         if eos:
-            ids = ids + [self.EOS]
+            ids = [*ids, self.EOS]
         return ids
 
     def decode(self, ids: Sequence[int]) -> str:

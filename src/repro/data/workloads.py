@@ -184,7 +184,7 @@ def sample_mixed(
     arrivals = (
         np.cumsum(rng.exponential(1.0 / arrival_rate, n)) if arrival_rate else np.zeros(n)
     )
-    for sim, t in zip(all_reqs, arrivals):
+    for sim, t in zip(all_reqs, arrivals, strict=True):
         sim.arrival = float(t)
         sim.request.arrival_time = float(t)
     return all_reqs

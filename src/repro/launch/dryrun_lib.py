@@ -168,7 +168,7 @@ def lower_cell(
 ) -> CellResult:
     """Lower + compile one cell; returns stats.  ``spec_tokens > 0`` lowers the
     speculative verify step (T = spec_tokens + 1) instead of plain decode."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
@@ -252,7 +252,7 @@ def lower_cell(
         shape=shape_name,
         mesh=mesh_kind,
         status="ok",
-        seconds=round(time.time() - t0, 1),
+        seconds=round(time.perf_counter() - t0, 1),
         flops_per_device=float(hcost.flops),
         bytes_per_device=float(hcost.bytes),
         xla_flops_per_device=float(cost.get("flops", 0.0)),

@@ -36,7 +36,7 @@ _CONFIG_FLAGS = {
 }
 
 # CLI defaults for a quick CPU run (applied only when no --config file)
-_CLI_BASE = dict(max_batch=4, max_len=192, max_new_tokens=24)
+_CLI_BASE = {"max_batch": 4, "max_len": 192, "max_new_tokens": 24}
 
 
 def main(argv=None) -> Dict[str, Any]:
@@ -89,7 +89,7 @@ def main(argv=None) -> Dict[str, Any]:
     rng = np.random.default_rng(cfg.seed)
     # shared prefix so the prefix cache (C_w signal) engages
     shared = rng.integers(0, serve.arch.vocab_size, 8).tolist()
-    t0 = time.time()
+    t0 = time.perf_counter()
     handles = []
     for _ in range(args.requests):
         body = rng.integers(0, serve.arch.vocab_size, args.prompt_len - 8).tolist()
@@ -111,7 +111,7 @@ def main(argv=None) -> Dict[str, Any]:
             print(f"!! cancelled {handles[-1].request_id} mid-run")
         if steps > 5000:
             raise RuntimeError("engine did not drain")
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
 
     s = serve.summary()
     done = [h for h in handles if h.state.value == "finished"]

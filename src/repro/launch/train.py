@@ -116,9 +116,9 @@ def main(argv=None) -> Dict[str, Any]:
         return step
 
     sup = TrainSupervisor(run_step, save, restore, checkpoint_every=args.ckpt_every)
-    t0 = time.time()
+    t0 = time.perf_counter()
     report = sup.run(args.steps)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     first = losses.get(min(losses)) if losses else float("nan")
     last = losses.get(max(losses)) if losses else float("nan")
     print(

@@ -378,8 +378,8 @@ class ServeSimulator:
         self.monitor.record_tokens(wid, emitted, end)
         w.publish(end)
         self.trace.append(
-            dict(t=end, wid=wid, depth=k, batch=B, emitted=emitted,
-                 acc=w.acceptance, iter_s=t_iter)
+            {"t": end, "wid": wid, "depth": k, "batch": B,
+             "emitted": emitted, "acc": w.acceptance, "iter_s": t_iter}
         )
         self.now = max(self.now, start)
         self._maybe_start_prefill(wid)

@@ -108,13 +108,19 @@ def verify_tokens(
 
 
 def verify_reference(
-    key,
+    seed: int,
     draft_tokens,
     draft_probs,
     target_logits,
     temperature: float = 0.0,
 ) -> Tuple[int, int]:
-    """Sequential single-sequence oracle (numpy-ish, for property tests)."""
+    """Sequential single-sequence oracle (numpy-ish, for property tests).
+
+    Takes a plain int ``seed`` rather than a PRNG key: deriving a host seed
+    from a device key (``int(jax.random.randint(...))``) is a blocking
+    device round-trip — flowlint FL302 — and the oracle is host-side numpy
+    anyway.
+    """
     import numpy as np
 
     k = draft_tokens.shape[0]
@@ -122,7 +128,7 @@ def verify_reference(
     p_full = np.asarray(
         token_probs(jnp.asarray(target_logits), temperature, 0, 1.0)
     )
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    rng = np.random.default_rng(seed)
     n_acc = 0
     for i in range(k):
         p_i = p_full[i, draft_tokens[i]]

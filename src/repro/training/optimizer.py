@@ -166,7 +166,7 @@ def adafloor(cfg: OptConfig):
         gflat = treedef.flatten_up_to(grads)
         vrflat = treedef.flatten_up_to(state.vr)
         vcflat = treedef.flatten_up_to(state.vc)
-        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat, gflat, vrflat, vcflat)]
+        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat, gflat, vrflat, vcflat, strict=True)]
         updates = treedef.unflatten([o[0] for o in out])
         vr = treedef.unflatten([o[1] for o in out])
         vc = treedef.unflatten([o[2] for o in out])

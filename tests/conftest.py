@@ -11,20 +11,24 @@ import os
 # host-device override in a subprocess; never here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax  # noqa: E402
+import jax
 
 jax.config.update("jax_enable_x64", False)
 
-import dataclasses  # noqa: E402
+import dataclasses
 
-import numpy as np  # noqa: E402
-import pytest  # noqa: E402
+import numpy as np
+import pytest
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slo: SLO control-plane serving-harness tests (run as `pytest -m slo`)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection drills (run as `pytest -m chaos`)",
     )
 
 
@@ -52,7 +56,7 @@ def engine_factory(tiny_model):
     cfg, params = tiny_model
 
     def make(n_pairs=1, **econf_kw):
-        kw = dict(max_batch=2, max_len=96)
+        kw = {"max_batch": 2, "max_len": 96}
         kw.update(econf_kw)
         return PipeServeEngine(cfg, params, n_pairs=n_pairs,
                                econf=EngineConfig(**kw))

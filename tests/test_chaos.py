@@ -1,0 +1,107 @@
+"""Seeded chaos drills (``pytest -m chaos``): kill workers at adversarial
+moments and assert the accounting invariant the fault paths promise —
+
+    every submitted request ends in a terminal state with EXACTLY ONE
+    RequestRecord; nothing is dropped, nothing is double-counted.
+
+These are the fault paths FL2 (donation) and FL4 (determinism) protect:
+a dropped record looks exactly like a donated-buffer read or a
+hash-order-dependent reroute would make it look.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.request import Request, RequestState, SamplingParams
+
+TERMINAL = (RequestState.FINISHED, RequestState.FAILED, RequestState.CANCELLED)
+
+pytestmark = pytest.mark.chaos
+
+
+def _assert_no_dropped_records(eng, reqs):
+    """Exactly-once record conservation over every submitted request."""
+    rec_ids = [r.request_id for r in eng.monitor.completed]
+    assert sorted(rec_ids) == sorted(r.request_id for r in reqs), (
+        "RequestRecords dropped or duplicated after the fault"
+    )
+    for req in reqs:
+        assert req.state in TERMINAL, (req.request_id, req.state)
+
+
+def test_worker_death_mid_decode_conserves_records(engine_factory, trace_factory):
+    eng = engine_factory(n_pairs=2)
+    reqs = trace_factory("bursty", n=6, seed=21, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    # run until the victim is genuinely mid-decode (has committed tokens)
+    victim = None
+    for _ in range(40):
+        eng.step()
+        for p in eng.pairs:
+            if p.active_slots() and any(
+                req is not None and req.output_tokens for req in p.slot_req
+            ):
+                victim = p.worker_id
+                break
+        if victim is not None:
+            break
+    assert victim is not None, "no pair reached mid-decode"
+    eng.fail_worker(victim)
+    eng.run_until_done(max_steps=1500)
+    _assert_no_dropped_records(eng, reqs)
+    # the survivor finished everything: in-flight work restarted, not lost
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(rec.worker_id != victim for rec in eng.monitor.completed)
+
+
+def test_worker_death_mid_prefill_conserves_records(engine_factory, tiny_model):
+    cfg, _ = tiny_model
+    eng = engine_factory(n_pairs=2, prefill_chunk=8)
+    rng = np.random.default_rng(22)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 40).tolist(),
+                    params=SamplingParams(max_new_tokens=4)) for _ in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()  # one chunk ingested; partial prefills are parked on-pair
+    victims = [p.worker_id for p in eng.pairs if p.prefill_in_flight()]
+    assert victims, "no pair was mid-prefill after one tick"
+    eng.fail_worker(victims[0])
+    eng.run_until_done(max_steps=1500)
+    _assert_no_dropped_records(eng, reqs)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+
+
+def test_last_worker_loss_fails_everything_with_records(engine_factory,
+                                                        trace_factory):
+    eng = engine_factory(n_pairs=1)
+    reqs = trace_factory("bursty", n=4, seed=23, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    eng.fail_worker(0)
+    _assert_no_dropped_records(eng, reqs)
+    assert all(r.state == RequestState.FAILED for r in reqs)
+    assert all(r.error == "no_healthy_workers" for r in reqs)
+    assert eng.drained()
+
+
+def test_chaos_replay_is_deterministic(engine_factory, trace_factory):
+    """Same seed, same kill tick => identical terminal outcome.  Divergence
+    here is exactly what FL4 exists to prevent (hash()/set-order/global-RNG
+    leaking into reroute decisions)."""
+
+    def run_once():
+        eng = engine_factory(n_pairs=2)
+        reqs = trace_factory("bursty", n=4, seed=24, max_new=6)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        eng.fail_worker(1)
+        eng.run_until_done(max_steps=1500)
+        _assert_no_dropped_records(eng, reqs)
+        # key by submission index: request_id is a process-global counter
+        return {i: (r.state, tuple(r.output_tokens), r.worker_id)
+                for i, r in enumerate(reqs)}
+
+    assert run_once() == run_once()

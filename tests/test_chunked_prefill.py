@@ -21,9 +21,9 @@ def test_chunked_greedy_bit_identical(engine_factory, trace_factory):
     bucketed and the legacy one-shot paths (greedy)."""
     runs = {}
     for name, kw in {
-        "chunked": dict(prefill_chunk=16),
+        "chunked": {"prefill_chunk": 16},
         "bucketed": {},
-        "legacy": dict(prefill_buckets=False, verify_buckets=None),
+        "legacy": {"prefill_buckets": False, "verify_buckets": None},
     }.items():
         runs[name] = _outputs(engine_factory(**kw), trace_factory("bursty", n=5))
     assert runs["chunked"] == runs["bucketed"] == runs["legacy"]

@@ -1,0 +1,440 @@
+"""flowlint rule fixtures: one true positive AND one true negative per rule,
+including the repo's historical bugs as regression fixtures —
+
+* per-instance jit compiles (FL102, engine hot-path overhaul),
+* donated-cache read-after-donate (FL201, same PR),
+* PYTHONHASHSEED-randomized ``hash()`` chain keys (FL401, KV prefix-cache
+  determinism fix),
+
+plus pragma semantics, baseline matching, and an integration run asserting
+the committed baseline keeps ``--fail-on-new`` green on this repo.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.flowlint.core import (
+    Finding, analyze_source, is_hot_path, load_baseline, split_new,
+)
+
+COLD = "src/repro/launch/fixture.py"   # FL3 does not apply here
+HOT = "src/repro/serving/fixture.py"   # FL3 applies here
+
+
+def lint(src, path=COLD):
+    return analyze_source(path, textwrap.dedent(src))
+
+
+def rules(src, path=COLD):
+    return [f.rule for f in lint(src, path)]
+
+
+# -- FL1: retrace hazards -----------------------------------------------------
+
+def test_fl101_jit_in_loop_tp():
+    assert rules("""
+        import jax
+        def build(fns):
+            out = []
+            for fn in fns:
+                out.append(jax.jit(fn))
+            return out
+    """) == ["FL101"]
+
+
+def test_fl101_module_level_jit_tn():
+    assert rules("""
+        import jax
+        def step(x):
+            return x
+        step_jit = jax.jit(step)
+    """) == []
+
+
+def test_fl102_per_instance_jit_tp():
+    # historical: ModelLane compiled its decode per instance; N lanes =
+    # N identical XLA compiles (caught by jit_cache_sizes, now baselined)
+    assert rules("""
+        import jax
+        class Lane:
+            def __init__(self, model):
+                self._decode = jax.jit(model.decode_step)
+    """) == ["FL102"]
+
+
+def test_fl102_decorated_method_and_plain_function_tn():
+    # @partial(jax.jit) on a def evaluates once at class/module creation,
+    # and jit inside a *plain* function is a deliberate factory pattern
+    assert rules("""
+        import jax
+        from functools import partial
+        class Lane:
+            @partial(jax.jit, static_argnames=("n",))
+            def decode(self, x, n):
+                return x
+        def make_step(fn):
+            return jax.jit(fn)
+    """) == []
+
+
+def test_fl103_id_and_fstring_cache_keys_tp():
+    found = rules("""
+        def get(cache, obj, b, s):
+            cache[id(obj)] = 1
+            cache[f"{b}x{s}"] = 2
+    """)
+    assert found == ["FL103", "FL103"]
+
+
+def test_fl103_stable_tuple_key_tn():
+    assert rules("""
+        def get(cache, b, s, sizes, i):
+            cache[(b, s)] = 1
+            sizes[f"pair{i}"] = 2  # not a jit/compile cache
+    """) == []
+
+
+def test_fl104_mutable_static_arg_tp_and_tn():
+    src = """
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnames=("buckets",))
+        def pad_to(x, buckets):
+            return x
+        def bad(x):
+            return pad_to(x, buckets=[8, 16, 32])
+        def good(x):
+            return pad_to(x, buckets=(8, 16, 32))
+    """
+    assert rules(src) == ["FL104"]
+
+
+# -- FL2: donation safety -----------------------------------------------------
+
+DONATING = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def commit(cache, n):
+        return cache
+"""
+
+
+def test_fl201_read_after_donate_tp():
+    # historical: engine read a donated KV cache after jit dispatch —
+    # "Array has been deleted" under donation, garbage without it
+    assert rules(DONATING + """
+        def step(cache, n):
+            new_cache = commit(cache, n)
+            return cache
+    """) == ["FL201"]
+
+
+def test_fl201_rebind_same_statement_tn():
+    # the repo-wide safe idiom: rebind the donated buffer in one statement
+    assert rules(DONATING + """
+        def step(cache, n):
+            cache = commit(cache, n)
+            return cache
+    """) == []
+
+
+def test_fl201_alias_read_tp():
+    assert rules(DONATING + """
+        def step(cache, n):
+            before = cache
+            cache = commit(cache, n)
+            return before
+    """) == ["FL201"]
+
+
+def test_fl201_tuple_rebind_tn():
+    assert rules("""
+        import jax
+        _decode = jax.jit(lambda p, c, t: (t, c), donate_argnums=(1,))
+        def step(params, cache, tok):
+            logits, cache = _decode(params, cache, tok)
+            return logits, cache
+    """) == []
+
+
+def test_fl201_donate_in_branch_then_read_tp():
+    assert rules(DONATING + """
+        def step(cache, n, flush):
+            if flush:
+                commit(cache, n)
+            return cache
+    """) == ["FL201"]
+
+
+# -- FL3: host-sync discipline (hot-path allowlist) ---------------------------
+
+def test_hot_path_allowlist():
+    assert is_hot_path("src/repro/core/engine.py")
+    assert is_hot_path("src/repro/core/scheduler.py")
+    assert is_hot_path("src/repro/serving/simulator.py")
+    assert not is_hot_path("src/repro/launch/serve.py")
+    assert not is_hot_path("src/repro/models/model.py")
+
+
+SYNC = """
+    import jax
+    import jax.numpy as jnp
+    def f(x):
+        y = jnp.sum(x)
+        return {}
+"""
+
+
+def test_fl301_302_303_device_syncs_tp():
+    assert rules(SYNC.format("y.item()"), path=HOT) == ["FL301"]
+    assert rules(SYNC.format("float(y)"), path=HOT) == ["FL302"]
+    assert rules(SYNC.format("int(y)"), path=HOT) == ["FL302"]
+
+
+def test_fl303_np_asarray_on_device_tp():
+    assert rules("""
+        import jax.numpy as jnp
+        import numpy as np
+        def f(x):
+            y = jnp.sum(x)
+            return np.asarray(y)
+    """, path=HOT) == ["FL303"]
+
+
+def test_fl3_via_bulk_device_get_tn():
+    # the blessed pattern: one bulk device_get, then host-side conversions
+    assert rules("""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        def f(x):
+            y = jnp.sum(x)
+            h = np.asarray(jax.device_get(y))
+            return float(h)
+    """, path=HOT) == []
+
+
+def test_fl3_cold_path_not_flagged_tn():
+    assert rules(SYNC.format("float(y)"), path=COLD) == []
+
+
+def test_fl304_two_gets_one_block_tp():
+    assert rules("""
+        import jax
+        def f(a, b):
+            x = jax.device_get(a)
+            y = jax.device_get(b)
+            return x, y
+    """, path=HOT) == ["FL304"]
+
+
+def test_fl304_get_in_for_loop_tp():
+    assert rules("""
+        import jax
+        def f(xs):
+            out = []
+            for x in xs:
+                out.append(jax.device_get(x))
+            return out
+    """, path=HOT) == ["FL304"]
+
+
+def test_fl304_branch_exclusive_gets_tn():
+    # engine decode_iteration shape: early-return branch and main path each
+    # do their ONE bulk fetch — mutually exclusive, not additive
+    assert rules("""
+        import jax
+        def f(x, early):
+            if early:
+                a = jax.device_get(x)
+                return a
+            b = jax.device_get(x)
+            return b
+    """, path=HOT) == []
+
+
+def test_fl305_branch_on_device_value_tp_tn():
+    assert rules("""
+        import jax.numpy as jnp
+        def f(x):
+            y = jnp.max(x)
+            if y > 0:
+                return 1
+            return 0
+    """, path=HOT) == ["FL305"]
+    assert rules("""
+        import jax
+        import jax.numpy as jnp
+        def f(x):
+            y = bool(jax.device_get(jnp.max(x) > 0))
+            if y:
+                return 1
+            return 0
+    """, path=HOT) == []
+
+
+# -- FL4: determinism ---------------------------------------------------------
+
+def test_fl401_builtin_hash_tp():
+    # historical: KV chain keys used hash((parent, tuple(tokens))) —
+    # PYTHONHASHSEED made workers disagree on prefix-cache identity
+    assert rules("""
+        def chain_key(parent, tokens):
+            return hash((parent, tuple(tokens)))
+    """) == ["FL401"]
+
+
+def test_fl401_crc32_tn():
+    assert rules("""
+        import zlib
+        def chain_key(parent, tokens):
+            return zlib.crc32(bytes(tokens)) ^ parent
+    """) == []
+
+
+def test_fl402_time_time_tp_perf_counter_tn():
+    assert rules("""
+        import time
+        def now():
+            return time.time()
+    """) == ["FL402"]
+    assert rules("""
+        import time
+        def now():
+            return time.perf_counter(), time.monotonic()
+    """) == []
+
+
+def test_fl403_global_rng_tp():
+    found = rules("""
+        import random
+        import numpy as np
+        def jitter():
+            a = random.random()
+            b = np.random.rand(3)
+            rng = np.random.default_rng()
+            return a, b, rng
+    """)
+    assert found == ["FL403", "FL403", "FL403"]
+
+
+def test_fl403_seeded_rng_tn():
+    assert rules("""
+        import numpy as np
+        def jitter(seed):
+            rng = np.random.default_rng(seed)
+            return rng.uniform()
+    """) == []
+
+
+def test_fl404_set_iteration_tp():
+    assert rules("""
+        def pick(workers):
+            for w in set(workers):
+                return w
+    """) == ["FL404"]
+    assert rules("""
+        def pick(workers):
+            return min({w for w in workers})
+    """) == ["FL404"]
+
+
+def test_fl404_sorted_set_tn():
+    assert rules("""
+        def pick(workers):
+            for w in sorted(set(workers)):
+                return w
+    """) == []
+
+
+# -- pragmas ------------------------------------------------------------------
+
+def test_pragma_with_reason_suppresses():
+    assert rules("""
+        import time
+        def now():
+            return time.time()  # flowlint: disable=FL402 wall clock wanted here
+    """) == []
+
+
+def test_pragma_family_code_and_standalone_line():
+    assert rules("""
+        import jax
+        class Lane:
+            def __init__(self, model):
+                # flowlint: disable=FL1 deliberate per-lane cache
+                self._decode = jax.jit(model.decode_step)
+    """) == []
+
+
+def test_pragma_without_reason_is_fl001():
+    found = rules("""
+        import time
+        def now():
+            return time.time()  # flowlint: disable=FL402
+    """)
+    assert found == ["FL001"]
+
+
+def test_pragma_does_not_suppress_other_rules():
+    assert rules("""
+        import time
+        def now():
+            return time.time()  # flowlint: disable=FL403 wrong code
+    """) == ["FL402"]
+
+
+# -- baseline -----------------------------------------------------------------
+
+def _finding(file, rule, text, line=1):
+    return Finding(file=file, line=line, col=0, rule=rule, message="m", text=text)
+
+
+def test_split_new_respects_multiplicity():
+    from collections import Counter
+    f1 = _finding("a.py", "FL402", "t0 = time.time()", line=3)
+    f2 = _finding("a.py", "FL402", "t0 = time.time()", line=9)
+    baseline = Counter({("a.py", "FL402", "t0 = time.time()"): 1})
+    old, new = split_new([f1, f2], baseline)
+    assert len(old) == 1 and len(new) == 1
+
+
+def test_baseline_is_line_number_insensitive():
+    from collections import Counter
+    f = _finding("a.py", "FL102", "self._x = jax.jit(fn)", line=200)
+    baseline = Counter({("a.py", "FL102", "self._x = jax.jit(fn)"): 1})
+    old, new = split_new([f], baseline)
+    assert old and not new
+
+
+def test_committed_baseline_contents():
+    """The burned-down baseline holds exactly the acknowledged per-lane jit
+    sites in the engine — nothing else may hide there."""
+    baseline = load_baseline(REPO / "tools" / "flowlint" / "baseline.json")
+    assert sum(baseline.values()) == 4
+    assert all(rule == "FL102" for (_, rule, _) in baseline)
+    assert all(file == "src/repro/core/engine.py" for (file, _, _) in baseline)
+
+
+# -- integration --------------------------------------------------------------
+
+def test_repo_is_clean_under_fail_on_new():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.flowlint", "src", "tests",
+         "--fail-on-new", "--json"],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+    )
+    payload = json.loads(proc.stdout)
+    assert proc.returncode == 0, (
+        f"new flowlint findings:\n{json.dumps(payload.get('new'), indent=2)}"
+    )
+    assert payload["new"] == []
+    assert payload["baselined"] == 4

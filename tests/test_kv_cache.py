@@ -104,7 +104,7 @@ def test_manager_invariants_under_random_ops(ops):
         for b in kv.pool.blocks:
             assert b.ref_count >= 0
         free_set = set(kv.pool.free)
-        for bid in free_set:
+        for bid in sorted(free_set):
             assert kv.pool.blocks[bid].ref_count == 0
     for rid in list(live):
         kv.free_sequence(rid)

@@ -83,7 +83,7 @@ def test_matches_sequential_reference_greedy(temperature):
     res = verify_tokens(jax.random.PRNGKey(0), draft, q, logits, temperature=0.0)
     for b in range(B):
         n_ref, nxt_ref = verify_reference(
-            jax.random.PRNGKey(0), np.asarray(draft[b]), np.asarray(q[b]),
+            0, np.asarray(draft[b]), np.asarray(q[b]),
             np.asarray(logits[b]), temperature=0.0,
         )
         assert int(res.n_accepted[b]) == n_ref

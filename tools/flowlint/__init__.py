@@ -1,0 +1,18 @@
+"""flowlint — repo-specific static analysis for JAX serving hazards.
+
+Four rule families, each motivated by a regression this repo actually
+shipped a fix for:
+
+* **FL1 retrace hazards** — jit caches keyed per instance / per loop
+  iteration, unstable cache keys, unhashable static arguments.
+* **FL2 donation safety** — reads of a buffer after it was passed in a
+  ``donate_argnums`` position.
+* **FL3 host-sync discipline** — stray host↔device round-trips on the
+  engine/scheduler/serving hot path.
+* **FL4 determinism** — PYTHONHASHSEED-dependent or wall-clock-dependent
+  values feeding routing and scheduling decisions.
+
+Run as ``python -m tools.flowlint src/ tests/``; see ``--help`` for the
+baseline / ``--fail-on-new`` workflow and ``README.md`` for rationale.
+"""
+from tools.flowlint.core import Finding, analyze_source, scan_paths  # noqa: F401

@@ -1,0 +1,91 @@
+"""flowlint command line.
+
+Typical invocations::
+
+    python -m tools.flowlint src/ tests/                  # report everything
+    python -m tools.flowlint src/ tests/ --fail-on-new    # CI gate
+    python -m tools.flowlint src/ --write-baseline        # refresh baseline
+    python -m tools.flowlint src/ --json                  # machine-readable
+
+Exit codes: 0 clean (or, with ``--fail-on-new``, no findings beyond the
+baseline); 1 findings present / new findings; 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.flowlint.core import (
+    Finding, load_baseline, scan_paths, split_new, write_baseline,
+)
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flowlint",
+        description="AST lint for JAX trace/donation/host-sync/determinism "
+                    "hazards (rules FL1xx-FL4xx).",
+    )
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit machine-readable JSON to stdout")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 only for findings NOT in the baseline")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file and exit 0")
+    args = ap.parse_args(argv)
+
+    findings = scan_paths(args.paths)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"flowlint: wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if (
+        args.fail_on_new and args.baseline
+    ) else None
+    if baseline is not None:
+        old, new = split_new(findings, baseline)
+    else:
+        old, new = [], list(findings)
+
+    if args.as_json:
+        payload = {
+            "findings": [f.to_json() for f in findings],
+            "new": [f.to_json() for f in new],
+            "baselined": len(old),
+            "counts": _counts(findings),
+        }
+        json.dump(payload, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        for f in new:
+            print(f.format())
+        if old:
+            print(f"flowlint: {len(old)} baselined finding(s) suppressed "
+                  f"({args.baseline.name})", file=sys.stderr)
+        if new:
+            label = "new " if baseline is not None else ""
+            print(f"flowlint: {len(new)} {label}finding(s)", file=sys.stderr)
+        else:
+            print("flowlint: clean", file=sys.stderr)
+
+    return 1 if new else 0
+
+
+def _counts(findings) -> dict:
+    out: dict = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return dict(sorted(out.items()))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

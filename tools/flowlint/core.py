@@ -1,0 +1,266 @@
+"""flowlint core: file discovery, name resolution, pragmas, baseline, driver.
+
+The analyzer is deliberately stdlib-only (``ast`` + ``json``): it has to run
+in CI before any project dependency is installed, and it must never be the
+reason a container needs one more wheel.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from collections import Counter
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# findings
+
+#: Modules where FL3 (host-sync discipline) applies.  These are the serving
+#: hot path: one stray sync per decode iteration is a per-token latency tax.
+HOT_PATH_SUFFIXES = ("core/engine.py", "core/scheduler.py")
+HOT_PATH_DIRS = ("/serving/",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    file: str          # posix path as given on the command line
+    line: int          # 1-indexed
+    col: int           # 0-indexed (ast convention)
+    rule: str          # e.g. "FL102"
+    message: str
+    text: str = ""     # stripped source line, used for baseline matching
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line} {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "file": self.file, "line": self.line, "col": self.col,
+            "rule": self.rule, "message": self.message, "text": self.text,
+        }
+
+    def baseline_key(self) -> Tuple[str, str, str]:
+        # Line numbers drift with unrelated edits; (file, rule, source text)
+        # is stable until the flagged statement itself changes.
+        return (self.file, self.rule, self.text)
+
+
+def is_hot_path(path: str) -> bool:
+    p = Path(path).as_posix()
+    return p.endswith(HOT_PATH_SUFFIXES) or any(
+        d in p and p.endswith(".py") for d in HOT_PATH_DIRS
+    )
+
+
+# --------------------------------------------------------------------------
+# import/name resolution
+
+class ImportMap:
+    """Maps local names to canonical dotted module paths.
+
+    ``import jax.numpy as jnp`` makes ``jnp.asarray`` resolve to
+    ``jax.numpy.asarray``; ``from time import time`` makes a bare ``time``
+    call resolve to ``time.time``.  Unimported roots resolve to themselves so
+    locally-defined callables keep their literal names.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted path of a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+
+# --------------------------------------------------------------------------
+# pragmas
+
+PRAGMA_RE = re.compile(
+    r"#\s*flowlint:\s*disable=([A-Za-z0-9,\s]*?[A-Za-z0-9])(?:\s+(.*))?$"
+)
+
+
+class Pragmas:
+    """``# flowlint: disable=FL102 <reason>`` suppression comments.
+
+    A pragma suppresses matching findings on its own line; a comment-only
+    pragma line also covers the next source line.  Codes may be a full rule
+    (``FL304``) or a family (``FL3``).  A pragma without a reason is itself a
+    finding (FL001): suppressions must be auditable.
+    """
+
+    def __init__(self, source: str):
+        self.by_line: Dict[int, Tuple[Tuple[str, ...], bool]] = {}
+        self.meta: List[Tuple[int, str]] = []  # (line, codes) missing a reason
+        lines = source.splitlines()
+        for lineno, col, comment in self._comment_tokens(source):
+            m = PRAGMA_RE.search(comment)
+            if not m:
+                continue
+            codes = tuple(
+                c.strip().upper() for c in m.group(1).split(",") if c.strip()
+            )
+            reason = (m.group(2) or "").strip()
+            self.by_line[lineno] = (codes, bool(reason))
+            line = lines[lineno - 1] if lineno <= len(lines) else ""
+            if not line[:col].strip():  # comment-only: covers next line too
+                self.by_line.setdefault(lineno + 1, (codes, True))
+            if not reason:
+                self.meta.append((lineno, ",".join(codes)))
+
+    @staticmethod
+    def _comment_tokens(source: str):
+        """Real COMMENT tokens only — pragma text inside string literals
+        (e.g. lint-test fixtures) must not count."""
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    yield tok.start[0], tok.start[1], tok.string
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+
+    @staticmethod
+    def _covers(codes: Tuple[str, ...], rule: str) -> bool:
+        return any(rule == c or (len(c) == 3 and rule.startswith(c)) for c in codes)
+
+    def suppresses(self, finding: Finding) -> bool:
+        entry = self.by_line.get(finding.line)
+        return bool(entry and self._covers(entry[0], finding.rule))
+
+
+# --------------------------------------------------------------------------
+# per-file analysis
+
+class FileContext:
+    """Everything a rule visitor needs about one source file."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.imports = ImportMap(tree)
+        self.hot = is_hot_path(path)
+        self.findings: List[Finding] = []
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def add(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        self.findings.append(Finding(
+            file=self.path, line=line, col=getattr(node, "col_offset", 0),
+            rule=rule, message=message, text=self.line_text(line),
+        ))
+
+
+def analyze_source(path: str, source: str) -> List[Finding]:
+    """Run every rule family over one file; pragma-suppressed findings drop."""
+    from tools.flowlint.rules import ALL_RULES
+
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        line = e.lineno or 1
+        return [Finding(file=path, line=line, col=e.offset or 0, rule="FL000",
+                        message=f"syntax error: {e.msg}", text="")]
+    ctx = FileContext(path, source, tree)
+    for rule in ALL_RULES:
+        rule(ctx)
+    pragmas = Pragmas(source)
+    kept = [f for f in ctx.findings if not pragmas.suppresses(f)]
+    for line, codes in pragmas.meta:
+        kept.append(Finding(
+            file=path, line=line, col=0, rule="FL001",
+            message=f"pragma disable={codes} has no reason — "
+                    "suppressions must say why",
+            text=ctx.line_text(line),
+        ))
+    return sorted(kept, key=lambda f: (f.line, f.col, f.rule))
+
+
+def discover(paths: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(
+                f for f in sorted(pp.rglob("*.py"))
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)
+            )
+        elif pp.suffix == ".py":
+            files.append(pp)
+    return files
+
+
+def scan_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in discover(paths):
+        findings.extend(analyze_source(f.as_posix(), f.read_text()))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# baseline
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path) -> Counter:
+    if not path.exists():
+        return Counter()
+    data = json.loads(path.read_text())
+    return Counter(
+        (e["file"], e["rule"], e.get("text", "")) for e in data.get("findings", [])
+    )
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    entries = [
+        {"file": f.file, "rule": f.rule, "line": f.line, "text": f.text}
+        for f in findings
+    ]
+    path.write_text(json.dumps(
+        {"version": BASELINE_VERSION, "findings": entries}, indent=2,
+    ) + "\n")
+
+
+def split_new(findings: Sequence[Finding], baseline: Counter):
+    """Partition findings into (baselined, new) respecting multiplicity."""
+    remaining = Counter(baseline)
+    old: List[Finding] = []
+    new: List[Finding] = []
+    for f in findings:
+        key = f.baseline_key()
+        if remaining.get(key, 0) > 0:
+            remaining[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return old, new

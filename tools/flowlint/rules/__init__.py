@@ -1,0 +1,26 @@
+"""Rule registry: each entry is ``rule(ctx: FileContext) -> None``."""
+from tools.flowlint.rules.fl1_retrace import check_fl1
+from tools.flowlint.rules.fl2_donation import check_fl2
+from tools.flowlint.rules.fl3_hostsync import check_fl3
+from tools.flowlint.rules.fl4_determinism import check_fl4
+
+ALL_RULES = (check_fl1, check_fl2, check_fl3, check_fl4)
+
+RULE_DOCS = {
+    "FL000": "file failed to parse",
+    "FL001": "flowlint pragma without a reason",
+    "FL101": "jax.jit created inside a loop",
+    "FL102": "jax.jit created inside a method (compiled per instance)",
+    "FL103": "unstable jit cache key (f-string / id())",
+    "FL104": "mutable literal passed as a static argument to a jitted callable",
+    "FL201": "variable read after being donated to an XLA computation",
+    "FL301": ".item() host sync on a device value in a hot-path module",
+    "FL302": "float()/int()/bool() host sync on a device value in a hot-path module",
+    "FL303": "np.asarray on a device value (implicit transfer) in a hot-path module",
+    "FL304": "more than one jax.device_get per block, or device_get in a loop",
+    "FL305": "branching on a device value (implicit __bool__ sync)",
+    "FL401": "builtin hash() — randomized by PYTHONHASHSEED",
+    "FL402": "time.time() — non-monotonic wall clock",
+    "FL403": "global / unseeded RNG call",
+    "FL404": "iteration over a set — PYTHONHASHSEED-dependent order",
+}

@@ -1,0 +1,231 @@
+"""FL1 — retrace hazards.
+
+Motivated by PR 2 ("Overhaul engine hot path"): steady-state decode was
+retracing every step because jit caches were keyed on values that vary per
+call.  The fixes (shape-bucketed prefill/verify, hoisted jits) only stay
+fixed if new code cannot quietly reintroduce the pattern:
+
+* FL101 — ``jax.jit`` called inside a loop: every iteration builds a fresh
+  ``jit`` wrapper with an empty cache, so nothing is ever reused.
+* FL102 — ``jax.jit`` called inside a method body: the cache lives on the
+  instance, so N instances compile the same function N times.  Sometimes
+  deliberate (per-lane donation buffers) — that is what the baseline is for.
+* FL103 — jit/compile cache keyed by an f-string or ``id()``: ``id()`` is
+  unstable across processes and reuses addresses within one, f-strings bake
+  varying values into the key.
+* FL104 — a list/dict/set literal passed in a ``static_argnums`` /
+  ``static_argnames`` position of a jitted callable defined in the same
+  module: unhashable statics raise at best, and per-call-identity statics
+  retrace at worst.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+JIT_PATHS = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+PARTIAL_PATHS = {"functools.partial"}
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp, ast.GeneratorExp)
+
+
+def _is_jit_call(node: ast.AST, imports) -> bool:
+    """True for ``jax.jit(...)`` or ``partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    path = imports.resolve(node.func)
+    if path in JIT_PATHS:
+        return True
+    if path in PARTIAL_PATHS:
+        return any(imports.resolve(a) in JIT_PATHS for a in node.args)
+    return False
+
+
+def _static_spec(call: ast.Call, imports) -> Tuple[Set[int], Set[str]]:
+    """Extract static_argnums / static_argnames from a jit(...) call."""
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        val = kw.value
+        items: List[ast.AST]
+        if isinstance(val, (ast.Tuple, ast.List)):
+            items = list(val.elts)
+        else:
+            items = [val]
+        if kw.arg == "static_argnums":
+            for it in items:
+                if isinstance(it, ast.Constant) and isinstance(it.value, int):
+                    nums.add(it.value)
+        elif kw.arg == "static_argnames":
+            for it in items:
+                if isinstance(it, ast.Constant) and isinstance(it.value, str):
+                    names.add(it.value)
+    return nums, names
+
+
+class _JitSiteVisitor(ast.NodeVisitor):
+    """FL101/FL102: where is each jax.jit(...) call created?"""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.loop_depth = 0
+        # stack entries: "class" | "function"
+        self.scope: List[str] = []
+
+    # -- scope tracking ----------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef):
+        for d in node.decorator_list:
+            self.visit(d)
+        self.scope.append("class")
+        for stmt in node.body:
+            self.visit(stmt)
+        self.scope.pop()
+
+    def _visit_func(self, node):
+        # Decorators evaluate in the ENCLOSING scope: @partial(jax.jit, ...)
+        # on a module-level def is the canonical good pattern, and on a
+        # method it still compiles once per class, not per instance.
+        for d in node.decorator_list:
+            self.visit(d)
+        self.scope.append("function")
+        for stmt in node.body:
+            self.visit(stmt)
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _visit_loop(self, node):
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+    visit_AsyncFor = _visit_loop
+
+    def _in_method(self) -> bool:
+        # a function whose nearest enclosing non-function scope is a class
+        if not self.scope or self.scope[-1] != "function":
+            return False
+        for kind in reversed(self.scope[:-1]):
+            if kind == "class":
+                return True
+            if kind != "function":
+                return False
+        return False
+
+    # -- the checks --------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        if _is_jit_call(node, self.ctx.imports):
+            if self.loop_depth > 0:
+                self.ctx.add(node, "FL101",
+                             "jax.jit created inside a loop — each iteration "
+                             "gets an empty cache and retraces; hoist it out")
+            elif self._in_method():
+                self.ctx.add(node, "FL102",
+                             "jax.jit created inside a method — the cache is "
+                             "per instance, so every new object recompiles; "
+                             "hoist to module scope or share the jitted fn")
+        self.generic_visit(node)
+
+
+class _CacheKeyVisitor(ast.NodeVisitor):
+    """FL103: unstable cache keys."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    @staticmethod
+    def _base_name(node: ast.AST) -> str:
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        return ".".join(reversed(parts)).lower()
+
+    def _contains_id_call(self, node: ast.AST) -> Optional[ast.Call]:
+        for sub in ast.walk(node):
+            if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                    and sub.func.id == "id" and len(sub.args) == 1):
+                return sub
+        return None
+
+    def visit_Subscript(self, node: ast.Subscript):
+        bad = self._contains_id_call(node.slice)
+        if bad is not None:
+            self.ctx.add(bad, "FL103",
+                         "id()-derived cache key — object ids are reused "
+                         "within a process and differ across processes; key "
+                         "on content (shapes/dtypes/config) instead")
+        elif isinstance(node.slice, ast.JoinedStr):
+            base = self._base_name(node.value)
+            if "cache" in base or "jit" in base:
+                self.ctx.add(node.slice, "FL103",
+                             "f-string key on a jit/compile cache — varying "
+                             "interpolated values defeat reuse; key on a "
+                             "stable tuple of shapes/config instead")
+        self.generic_visit(node)
+
+
+class _StaticArgVisitor(ast.NodeVisitor):
+    """FL104: mutable literals in static positions of same-module jits."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        # callable name -> (static_argnums, static_argnames, offset)
+        # offset=1 when the recorded name is a decorated def (arg 0 at call
+        # position 0); kept for clarity if bound-method handling grows.
+        self.statics: Dict[str, Tuple[Set[int], Set[str]]] = {}
+        self._collect()
+
+    def _record(self, name: str, call: ast.Call):
+        nums, names = _static_spec(call, self.ctx.imports)
+        if nums or names:
+            self.statics[name] = (nums, names)
+
+    def _collect(self):
+        for node in ast.walk(self.ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for d in node.decorator_list:
+                    if _is_jit_call(d, self.ctx.imports):
+                        self._record(node.name, d)
+            elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                if _is_jit_call(node.value, self.ctx.imports):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            self._record(tgt.id, node.value)
+                        elif isinstance(tgt, ast.Attribute):
+                            self._record(tgt.attr, node.value)
+
+    def visit_Call(self, node: ast.Call):
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        spec = self.statics.get(name or "")
+        if spec:
+            nums, names = spec
+            for i, arg in enumerate(node.args):
+                if i in nums and isinstance(arg, MUTABLE_LITERALS):
+                    self.ctx.add(arg, "FL104",
+                                 f"mutable literal in static_argnums position "
+                                 f"{i} of jitted '{name}' — unhashable "
+                                 "statics fail or retrace; pass a tuple")
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value, MUTABLE_LITERALS):
+                    self.ctx.add(kw.value, "FL104",
+                                 f"mutable literal for static arg "
+                                 f"'{kw.arg}' of jitted '{name}' — "
+                                 "unhashable statics fail or retrace; pass "
+                                 "a tuple or scalar")
+        self.generic_visit(node)
+
+
+def check_fl1(ctx) -> None:
+    _JitSiteVisitor(ctx).visit(ctx.tree)
+    _CacheKeyVisitor(ctx).visit(ctx.tree)
+    _StaticArgVisitor(ctx).visit(ctx.tree)

@@ -1,0 +1,267 @@
+"""FL2 — donation safety.
+
+Motivated by PR 2: the engine donates KV-cache buffers into jitted calls
+(``donate_argnums``) so XLA can update them in place.  A donated buffer is
+*deleted* on the host once the call is dispatched — any later read returns
+garbage or raises ``RuntimeError: Array has been deleted``.  The repo-wide
+convention is rebind-in-the-same-statement::
+
+    self.cache = self._commit(self.cache, n_new, idx)        # safe
+    logits, self.cache = self._decode(params, self.cache, t)  # safe
+
+FL201 flags reads of a variable (or a simple alias of it) after it was
+passed in a donated position without being rebound, via a per-function
+ordered walk over statements.  Loop bodies are walked twice so a donation in
+iteration N followed by a read in iteration N+1 is caught.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.flowlint.rules.fl1_retrace import JIT_PATHS, PARTIAL_PATHS
+
+
+def _donate_positions(call: ast.Call) -> Set[int]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            val = kw.value
+            items = val.elts if isinstance(val, (ast.Tuple, ast.List)) else [val]
+            return {
+                it.value for it in items
+                if isinstance(it, ast.Constant) and isinstance(it.value, int)
+            }
+    return set()
+
+
+def _jit_with_donation(node: ast.AST, imports) -> Optional[Set[int]]:
+    """Donated positions if node is jax.jit(...)/partial(jax.jit, ...) with
+    donate_argnums, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    path = imports.resolve(node.func)
+    if path in JIT_PATHS or (
+        path in PARTIAL_PATHS
+        and any(imports.resolve(a) in JIT_PATHS for a in node.args)
+    ):
+        pos = _donate_positions(node)
+        return pos or None
+    return None
+
+
+def _collect_donating_callables(ctx) -> Dict[str, Set[int]]:
+    """Map callable name (bare or attribute leaf) -> donated arg positions."""
+    registry: Dict[str, Set[int]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for d in node.decorator_list:
+                pos = _jit_with_donation(d, ctx.imports)
+                if pos:
+                    registry[node.name] = pos
+        elif isinstance(node, ast.Assign):
+            pos = _jit_with_donation(node.value, ctx.imports)
+            if pos:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        registry[tgt.id] = pos
+                    elif isinstance(tgt, ast.Attribute):
+                        registry[tgt.attr] = pos
+    return registry
+
+
+def _callee_name(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _expr_key(node: ast.AST) -> Optional[str]:
+    """Stable text key for a donatable expression (names / attr chains)."""
+    if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)):
+        try:
+            return ast.unparse(node)
+        except Exception:
+            return None
+    return None
+
+
+class _FunctionChecker:
+    def __init__(self, ctx, registry: Dict[str, Set[int]]):
+        self.ctx = ctx
+        self.registry = registry
+        # donated expr key -> (call node, callee name); alias -> canonical
+        self.donated: Dict[str, Tuple[ast.AST, str]] = {}
+        self.aliases: Dict[str, str] = {}
+
+    def _canon(self, key: str) -> str:
+        return self.aliases.get(key, key)
+
+    # -- per statement -----------------------------------------------------
+    def _assigned_keys(self, stmt: ast.stmt) -> Set[str]:
+        keys: Set[str] = set()
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            targets = [stmt.target]
+        for tgt in targets:
+            stack = [tgt]
+            while stack:
+                t = stack.pop()
+                if isinstance(t, (ast.Tuple, ast.List)):
+                    stack.extend(t.elts)
+                else:
+                    k = _expr_key(t)
+                    if k:
+                        keys.add(k)
+        return keys
+
+    def _donations_in(self, stmt: ast.stmt) -> List[Tuple[str, ast.Call, str]]:
+        out = []
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _callee_name(node)
+            positions = self.registry.get(name or "")
+            if not positions:
+                continue
+            for i in positions:
+                if i < len(node.args):
+                    k = _expr_key(node.args[i])
+                    if k:
+                        out.append((k, node, name))
+        return out
+
+    def _register_donations(self, stmt: ast.stmt, assigned: Set[str]) -> None:
+        """Mark donated buffers: the canonical name (unless rebound in this
+        very statement — the safe idiom) and every alias that still points
+        at the now-deleted value (rebinding the name does NOT save those)."""
+        for raw, call, callee in self._donations_in(stmt):
+            canon = self._canon(raw)
+            for alias, src in self.aliases.items():
+                if src == canon and alias not in assigned and alias != canon:
+                    self.donated[alias] = (call, callee)
+            if canon not in assigned and raw not in assigned:
+                self.donated[canon] = (call, callee)
+
+    def _check_reads(self, stmt: ast.stmt) -> None:
+        if not self.donated:
+            return
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load
+            ):
+                raw = _expr_key(node)
+                if raw is None:
+                    continue
+                k = raw if raw in self.donated else self._canon(raw)
+                hit = self.donated.get(k)
+                if hit is not None:
+                    _, callee = hit
+                    self.ctx.add(
+                        node, "FL201",
+                        f"'{k}' read after being donated to '{callee}' — "
+                        "the buffer is deleted once the call is dispatched; "
+                        "rebind the result in the donating statement or "
+                        "read before donating",
+                    )
+                    # one report per donated buffer per function
+                    del self.donated[k]
+                    if not self.donated:
+                        return
+
+    def _track_alias(self, stmt: ast.stmt) -> None:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and isinstance(stmt.value, (ast.Name, ast.Attribute))):
+            src = _expr_key(stmt.value)
+            if src:
+                self.aliases[stmt.targets[0].id] = self._canon(src)
+
+    def _process_simple(self, stmt: ast.stmt) -> None:
+        """Full processing for a statement with no nested blocks."""
+        self._check_reads(stmt)
+        assigned = self._assigned_keys(stmt)
+        self._register_donations(stmt, assigned)
+        for k in assigned:
+            self.donated.pop(k, None)
+            # links through a rebound name are stale either way
+            self.aliases.pop(k, None)
+            for alias in [a for a, s in self.aliases.items() if s == k]:
+                del self.aliases[alias]
+        self._track_alias(stmt)
+
+    def _process_header(self, expr: Optional[ast.AST]) -> None:
+        """Reads + donations in a compound statement's header expression."""
+        if expr is None:
+            return
+        wrapper = ast.Expr(value=expr)
+        ast.copy_location(wrapper, expr)
+        self._check_reads(wrapper)
+        self._register_donations(wrapper, set())
+
+    # -- block walking (linear, branch-union, loops twice) -------------------
+    def run_block(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.If):
+                self._process_header(stmt.test)
+                saved = dict(self.donated)
+                self.run_block(stmt.body)
+                after_body = self.donated
+                self.donated = dict(saved)
+                self.run_block(stmt.orelse)
+                self.donated.update(after_body)  # union: survived either branch
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._process_header(stmt.iter)
+                for k in self._assigned_keys_of(stmt.target):
+                    self.donated.pop(self._canon(k), None)
+                self.run_block(stmt.body)
+                self.run_block(stmt.body)  # catch donate@iter-N, read@iter-N+1
+                self.run_block(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                self._process_header(stmt.test)
+                self.run_block(stmt.body)
+                self.run_block(stmt.body)
+                self.run_block(stmt.orelse)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._process_header(item.context_expr)
+                self.run_block(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self.run_block(stmt.body)
+                for h in stmt.handlers:
+                    self.run_block(h.body)
+                self.run_block(stmt.orelse)
+                self.run_block(stmt.finalbody)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                # nested defs execute later with their own frame; the outer
+                # walk in check_fl2 analyzes nested function bodies separately
+                continue
+            else:
+                self._process_simple(stmt)
+
+    def _assigned_keys_of(self, target: ast.AST) -> Set[str]:
+        keys: Set[str] = set()
+        stack = [target]
+        while stack:
+            t = stack.pop()
+            if isinstance(t, (ast.Tuple, ast.List)):
+                stack.extend(t.elts)
+            else:
+                k = _expr_key(t)
+                if k:
+                    keys.add(k)
+        return keys
+
+
+def check_fl2(ctx) -> None:
+    registry = _collect_donating_callables(ctx)
+    if not registry:
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            checker = _FunctionChecker(ctx, registry)
+            checker.run_block(node.body)

@@ -1,0 +1,258 @@
+"""FL3 — host-sync discipline (hot-path modules only).
+
+Motivated by the engine-hot-path overhaul (PR 2) and the chunked-prefill PR:
+the decode loop budgets exactly ONE bulk ``jax.device_get`` per iteration;
+every extra ``.item()`` / ``float()`` / ``np.asarray`` on a device value is a
+hidden blocking round-trip that serializes the host against the accelerator
+and erases pipelining gains.  Rules apply only to the allowlisted hot path
+(``core/engine.py``, ``core/scheduler.py``, ``serving/*.py``) — cold-path
+tooling may sync freely.
+
+* FL301 — ``.item()`` on a device value.
+* FL302 — ``float()/int()/bool()`` on a device value.
+* FL303 — ``np.asarray``/``np.array`` directly on a device value (implicit
+  transfer; route it through the step's single ``jax.device_get``).
+* FL304 — more than one ``jax.device_get`` in the same statement block, or
+  any ``device_get`` inside a loop: batch values and fetch once.
+* FL305 — ``if``/``while`` directly on a device value (implicit ``__bool__``
+  sync).
+
+Taint model: values produced by ``jnp.*`` / ``jax.lax`` / ``jax.random`` /
+``jax.nn`` calls are DEVICE; ``jax.device_get`` and ``np.*`` results are
+HOST; everything else is UNKNOWN and never flagged (precision over recall —
+this gate must not cry wolf on the hot path).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+DEVICE = "device"
+HOST = "host"
+UNKNOWN = "unknown"
+
+DEVICE_ROOTS = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.",
+                "jax.scipy.", "jax.ops.")
+HOST_ROOTS = ("numpy.",)
+DEVICE_GET = "jax.device_get"
+# attribute reads that leave device-land (python ints / metadata)
+META_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding"}
+
+
+class _Taint:
+    """Flow-insensitive-enough expression classifier per function."""
+
+    def __init__(self, imports):
+        self.imports = imports
+        self.env: Dict[str, str] = {}
+
+    # -- classification ----------------------------------------------------
+    def of(self, node: ast.AST) -> str:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, UNKNOWN)
+        if isinstance(node, ast.Constant):
+            return HOST
+        if isinstance(node, ast.Call):
+            return self._of_call(node)
+        if isinstance(node, ast.Attribute):
+            if node.attr in META_ATTRS:
+                return HOST
+            return self.of(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.of(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self._join(self.of(node.left), self.of(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.of(node.operand)
+        if isinstance(node, ast.Compare):
+            states = [self.of(node.left), *(self.of(c) for c in node.comparators)]
+            return self._join(*states)
+        if isinstance(node, ast.BoolOp):
+            return self._join(*(self.of(v) for v in node.values))
+        if isinstance(node, ast.IfExp):
+            return self._join(self.of(node.body), self.of(node.orelse))
+        return UNKNOWN
+
+    def _of_call(self, node: ast.Call) -> str:
+        path = self.imports.resolve(node.func)
+        if path:
+            if path == DEVICE_GET:
+                return HOST
+            if path.startswith(DEVICE_ROOTS):
+                return DEVICE
+            if path.startswith(HOST_ROOTS):
+                return HOST
+        # method on a device value (x.astype, x.sum, x.at[...].set) stays device
+        if isinstance(node.func, ast.Attribute):
+            base = self.of(node.func.value)
+            if base == DEVICE:
+                return DEVICE
+            if base == HOST and path is None:
+                return HOST
+        return UNKNOWN
+
+    @staticmethod
+    def _join(*states: str) -> str:
+        if DEVICE in states:
+            return DEVICE
+        if all(s == HOST for s in states):
+            return HOST
+        return UNKNOWN
+
+    # -- assignment tracking ------------------------------------------------
+    def assign(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            state = self.of(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, stmt.value, state)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, stmt.value, self.of(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, ast.Name):
+                cur = self.env.get(stmt.target.id, UNKNOWN)
+                self.env[stmt.target.id] = self._join(cur, self.of(stmt.value))
+
+    def _bind(self, tgt: ast.AST, value: ast.AST, state: str) -> None:
+        if isinstance(tgt, ast.Name):
+            self.env[tgt.id] = state
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) and len(value.elts) == len(tgt.elts):
+                for t, v in zip(tgt.elts, value.elts, strict=True):
+                    self._bind(t, v, self.of(v))
+            else:
+                # unpacking an opaque value: device-ness propagates to all
+                for t in tgt.elts:
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = state
+
+
+def _resolve_or_none(imports, node) -> Optional[str]:
+    try:
+        return imports.resolve(node)
+    except Exception:
+        return None
+
+
+class _HotPathVisitor(ast.NodeVisitor):
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    def visit_FunctionDef(self, node):
+        self._check_function(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # ----------------------------------------------------------------------
+    def _check_function(self, fn) -> None:
+        taint = _Taint(self.ctx.imports)
+        self._walk_block(fn.body, taint, in_loop=False)
+
+    def _walk_block(self, body: List[ast.stmt], taint: _Taint, in_loop: bool) -> None:
+        get_sites: List[ast.Call] = []
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue  # nested defs are visited on their own
+            for call in self._device_gets_in_header(stmt):
+                get_sites.append(call)
+                if in_loop:
+                    self.ctx.add(call, "FL304",
+                                 "jax.device_get inside a loop — one blocking "
+                                 "round-trip per iteration; batch the values "
+                                 "and fetch once outside the loop")
+            self._check_exprs(stmt, taint)
+            taint.assign(stmt)
+            if isinstance(stmt, ast.If):
+                self._check_branch_test(stmt.test, taint)
+                self._walk_block(stmt.body, taint, in_loop)
+                self._walk_block(stmt.orelse, taint, in_loop)
+            elif isinstance(stmt, ast.While):
+                self._check_branch_test(stmt.test, taint)
+                self._walk_block(stmt.body, taint, in_loop=True)
+                self._walk_block(stmt.orelse, taint, in_loop)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                if isinstance(stmt.target, ast.Name):
+                    taint.env[stmt.target.id] = taint.of(stmt.iter)
+                self._walk_block(stmt.body, taint, in_loop=True)
+                self._walk_block(stmt.orelse, taint, in_loop)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._walk_block(stmt.body, taint, in_loop)
+            elif isinstance(stmt, ast.Try):
+                self._walk_block(stmt.body, taint, in_loop)
+                for h in stmt.handlers:
+                    self._walk_block(h.body, taint, in_loop)
+                self._walk_block(stmt.orelse, taint, in_loop)
+                self._walk_block(stmt.finalbody, taint, in_loop)
+        if len(get_sites) > 1 and not in_loop:
+            self.ctx.add(get_sites[1], "FL304",
+                         f"{len(get_sites)} jax.device_get calls in one block "
+                         "— each is a blocking round-trip; combine into one "
+                         "bulk device_get per step")
+
+    # -- header-only expression extraction ----------------------------------
+    def _header_exprs(self, stmt: ast.stmt) -> List[ast.AST]:
+        if isinstance(stmt, (ast.If, ast.While)):
+            return [stmt.test]
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            return [stmt.iter]
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return [i.context_expr for i in stmt.items]
+        if isinstance(stmt, ast.Try):
+            return []
+        return [stmt]  # simple statement: scan the whole thing
+
+    def _device_gets_in_header(self, stmt: ast.stmt) -> List[ast.Call]:
+        out = []
+        for root in self._header_exprs(stmt):
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call) and _resolve_or_none(
+                    self.ctx.imports, node.func
+                ) == DEVICE_GET:
+                    out.append(node)
+        return out
+
+    def _check_branch_test(self, test: ast.AST, taint: _Taint) -> None:
+        if taint.of(test) == DEVICE:
+            self.ctx.add(test, "FL305",
+                         "branching on a device value forces an implicit "
+                         "__bool__ host sync — fetch it with the step's bulk "
+                         "device_get first")
+
+    def _check_exprs(self, stmt: ast.stmt, taint: _Taint) -> None:
+        for root in self._header_exprs(stmt):
+            for node in ast.walk(root):
+                if not isinstance(node, ast.Call):
+                    continue
+                # FL301: x.item()
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args
+                        and taint.of(node.func.value) == DEVICE):
+                    self.ctx.add(node, "FL301",
+                                 ".item() on a device value is a blocking "
+                                 "sync — batch it into the step's single "
+                                 "bulk jax.device_get")
+                # FL302: float(x) / int(x) / bool(x)
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in ("float", "int", "bool")
+                        and len(node.args) == 1
+                        and taint.of(node.args[0]) == DEVICE):
+                    self.ctx.add(node, "FL302",
+                                 f"{node.func.id}() on a device value forces "
+                                 "a host sync — batch it into the step's "
+                                 "single bulk jax.device_get")
+                # FL303: np.asarray(x) / np.array(x)
+                else:
+                    path = _resolve_or_none(self.ctx.imports, node.func)
+                    if (path in ("numpy.asarray", "numpy.array", "numpy.copy")
+                            and node.args
+                            and taint.of(node.args[0]) == DEVICE):
+                        self.ctx.add(node, "FL303",
+                                     f"{path.split('.')[-1]}() on a device "
+                                     "value is an implicit transfer — go "
+                                     "through the step's bulk jax.device_get")
+
+
+def check_fl3(ctx) -> None:
+    if not ctx.hot:
+        return
+    _HotPathVisitor(ctx).visit(ctx.tree)

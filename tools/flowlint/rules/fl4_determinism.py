@@ -1,0 +1,153 @@
+"""FL4 — determinism hazards.
+
+Motivated by PR 5: KV-block chain keys were built with builtin ``hash()``,
+which PYTHONHASHSEED randomizes per process — two workers disagreed on
+prefix-cache identity and replicas diverged.  The fix (crc32 content keys)
+stays fixed only if the pattern cannot come back, and the same class of bug
+hides in wall-clock reads and global RNG state feeding routing/scheduling.
+
+* FL401 — builtin ``hash()``: per-process-randomized for str/bytes; use
+  ``zlib.crc32`` / ``hashlib`` on content instead.
+* FL402 — ``time.time()``: non-monotonic wall clock (NTP steps it); use
+  ``time.perf_counter()`` / ``time.monotonic()`` for intervals, or the
+  injected clock where one exists.
+* FL403 — global / unseeded RNG: module-level ``random.*``, legacy
+  ``np.random.*`` functions, or a zero-arg ``np.random.default_rng()`` —
+  all draw from process-global or entropy-seeded state, so replays differ.
+* FL404 — iterating a ``set`` (or aggregating one with ``min``/``max``/
+  ``list``/``tuple``/``next``): iteration order is PYTHONHASHSEED-dependent;
+  ``sorted(...)`` first.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+# module-level random functions that mutate/read process-global state
+PY_RANDOM_GLOBAL = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "betavariate", "seed",
+    "getrandbits", "triangular", "expovariate",
+}
+NP_RANDOM_LEGACY = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "beta", "binomial", "poisson", "exponential",
+}
+SET_CONSUMERS = {"min", "max", "list", "tuple", "next", "any", "all", "sum"}
+# `sorted(set)` / `len(set)` / membership are the deterministic uses
+
+
+class _FL4Visitor(ast.NodeVisitor):
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.hash_shadowed = any(
+            isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name == "hash"
+            for n in ast.walk(ctx.tree)
+        )
+        self.set_names: Set[str] = set()
+
+    # -- helpers -----------------------------------------------------------
+    def _is_setish(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in ("set", "frozenset"):
+                return True
+            # dict.keys() is insertion-ordered in py3.7+: NOT flagged
+            if isinstance(f, ast.Attribute) and f.attr in (
+                "intersection", "union", "difference", "symmetric_difference",
+            ):
+                return self._is_setish(f.value) or isinstance(f.value, ast.Name) and f.value.id in self.set_names
+        if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.BitAnd, ast.BitOr, ast.Sub, ast.BitXor)):
+            return self._is_setish(node.left) or self._is_setish(node.right)
+        if isinstance(node, ast.Name):
+            return node.id in self.set_names
+        return False
+
+    def _flag_set_iter(self, node: ast.AST, how: str) -> None:
+        self.ctx.add(node, "FL404",
+                     f"{how} a set — iteration order is PYTHONHASHSEED-"
+                     "dependent and will differ across workers; wrap in "
+                     "sorted(...) before it feeds any decision")
+
+    # -- assignments create set-typed names ---------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                if self._is_setish(node.value):
+                    self.set_names.add(tgt.id)
+                else:
+                    self.set_names.discard(tgt.id)
+        self.generic_visit(node)
+
+    # -- the checks --------------------------------------------------------
+    def visit_For(self, node: ast.For):
+        if self._is_setish(node.iter):
+            self._flag_set_iter(node.iter, "iterating")
+        self.generic_visit(node)
+
+    def visit_comprehension_gens(self, generators):
+        for gen in generators:
+            if self._is_setish(gen.iter):
+                self._flag_set_iter(gen.iter, "iterating")
+
+    def visit_ListComp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+    visit_GeneratorExp = visit_ListComp
+    visit_DictComp = visit_ListComp
+
+    def visit_SetComp(self, node):
+        # building a set from a set is fine; order doesn't survive anyway
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        imports = self.ctx.imports
+        f = node.func
+        # FL401: builtin hash()
+        if (isinstance(f, ast.Name) and f.id == "hash" and len(node.args) == 1
+                and not self.hash_shadowed
+                and f.id not in imports.aliases):
+            self.ctx.add(node, "FL401",
+                         "builtin hash() is randomized by PYTHONHASHSEED — "
+                         "workers will disagree; use zlib.crc32/hashlib on "
+                         "the content instead")
+        path = imports.resolve(f)
+        if path == "time.time":
+            self.ctx.add(node, "FL402",
+                         "time.time() is non-monotonic wall clock — use "
+                         "time.perf_counter()/time.monotonic() for "
+                         "intervals, or the injected clock")
+        elif path is not None:
+            if path.startswith("random.") and path.split(".", 1)[1] in PY_RANDOM_GLOBAL:
+                self.ctx.add(node, "FL403",
+                             f"{path}() draws from the process-global RNG — "
+                             "thread a seeded np.random.default_rng(seed) "
+                             "or random.Random(seed) through instead")
+            elif (path.startswith("numpy.random.")
+                    and path.rsplit(".", 1)[1] in NP_RANDOM_LEGACY):
+                self.ctx.add(node, "FL403",
+                             f"legacy np.random.{path.rsplit('.', 1)[1]}() "
+                             "uses global state — use a seeded "
+                             "np.random.default_rng(seed)")
+            elif path == "numpy.random.default_rng" and not node.args and not node.keywords:
+                self.ctx.add(node, "FL403",
+                             "default_rng() without a seed draws from OS "
+                             "entropy — replays will differ; pass an "
+                             "explicit seed")
+        # FL404: aggregating a set where order picks the winner
+        if (isinstance(f, ast.Name) and f.id in SET_CONSUMERS and node.args
+                and self._is_setish(node.args[0])
+                and f.id not in ("any", "all", "sum")):
+            # any/all/sum are order-independent; kept in SET_CONSUMERS for
+            # documentation but not flagged
+            self._flag_set_iter(node.args[0], f"{f.id}() over")
+        self.generic_visit(node)
+
+
+def check_fl4(ctx) -> None:
+    _FL4Visitor(ctx).visit(ctx.tree)
