@@ -310,6 +310,57 @@ def main(argv=None) -> int:
               f"long TTFT {chunked[f'long_ttft_ticks_{label}']}  "
               f"retraces {results[f'chunked_{label}']['retraces_steady']}")
 
+    # ---- paged KV + radix prefix reuse -------------------------------------
+    # the mixed trace twice through one paged engine: wave 2 re-submits the
+    # exact prompts, so its prefill work rides the radix-resident pages; a
+    # final long-context request proves service beyond the dense per-slot
+    # max_len ceiling (pages, not slots, bound the context)
+    print("engine_bench: paged KV (radix prefix reuse + long context)")
+    import numpy as np
+
+    from repro.serving.request import Request, SamplingParams
+
+    paged_max_context = 256
+    peng = PipeServeEngine(
+        cfg, params, n_pairs=1,
+        econf=EngineConfig(paged_kv=True, max_context=paged_max_context, **base),
+    )
+    peng.warmup()  # uncapped: covers the long-context buckets too
+    wave1, wave2 = trace("mixed"), trace("mixed")
+    results["paged_cold"] = serve_trace(peng, wave1)
+    results["paged_warm"] = serve_trace(peng, wave2)
+    hit_tokens = sum(r.cache_hit_tokens for r in wave2)
+    prompt_tokens = sum(len(r.prompt) for r in wave2)
+    long_prompt_len = paged_max_context - max_new - 16
+    long_ctx = Request(
+        prompt=np.random.default_rng(19).integers(
+            0, cfg.vocab_size, long_prompt_len
+        ).tolist(),
+        params=SamplingParams(max_new_tokens=max_new),
+    )
+    results["paged_long_context"] = serve_trace(peng, [long_ctx])
+    paged = {
+        "trace": "mixed x2 + long_context",
+        "max_context": paged_max_context,
+        "dense_max_len": base["max_len"],
+        "prefix_hit_rate": round(hit_tokens / max(prompt_tokens, 1), 3),
+        "tokens_per_s": results["paged_warm"]["tokens_per_s"],
+        "cold_tokens_per_s": results["paged_cold"]["tokens_per_s"],
+        "dense_tokens_per_s": results["mixed"]["tokens_per_s"],
+        "max_context_served": len(long_ctx.prompt) + len(long_ctx.output_tokens),
+        "retraces_steady": (
+            results["paged_cold"]["retraces_steady"]
+            + results["paged_warm"]["retraces_steady"]
+            + results["paged_long_context"]["retraces_steady"]
+        ),
+    }
+    print(f"  prefix hit rate {paged['prefix_hit_rate']:.0%}  "
+          f"warm {paged['tokens_per_s']:.1f} tok/s vs dense "
+          f"{paged['dense_tokens_per_s']:.1f}  "
+          f"context served {paged['max_context_served']} "
+          f"(dense ceiling {base['max_len']})  "
+          f"retraces {paged['retraces_steady']}")
+
     # ---- bucketing-off baseline (pre-PR hot path) on the mixed trace -------
     legacy = None
     if not args.skip_legacy:
@@ -340,6 +391,7 @@ def main(argv=None) -> int:
             "baseline_shed": slo_base["shed"],
         },
         "chunked": chunked,
+        "paged": paged,
         "legacy_mixed": legacy,
         "speedup_mixed": (
             round(results["mixed"]["tokens_per_s"] / legacy["tokens_per_s"], 2)

@@ -58,6 +58,16 @@ class ServeConfig:
     # None = one-shot bucketed prefill (the default hot path).
     prefill_chunk: Optional[int] = None
     prefill_preempt: bool = True     # EDF preemption at chunk boundaries
+    # ---- paged KV + radix prefix reuse -------------------------------------
+    paged_kv: bool = False           # block-table decode over a global page
+                                     # pool + radix prefix reuse + prefix-hit
+                                     # routing (attention-only archs)
+    max_context: Optional[int] = None  # per-sequence context ceiling when
+                                     # paged (page-count cap); None = max_len
+    kv_evict_policy: str = "requeue"  # pool-exhaustion policy mid-decode:
+                                     # "requeue" evicts the lowest-priority
+                                     # victim and re-queues it from scratch;
+                                     # "truncate" keeps the legacy finish-early
     # ---- SLO control plane ------------------------------------------------
     per_row_depth: bool = True       # per-slot speculation depths (needs
                                      # verify_buckets; falls back to a single
@@ -113,10 +123,32 @@ class ServeConfig:
                     f"max_len ({self.max_len})"
                 )
         for field in ("per_row_depth", "slo_routing", "prefill_buckets",
-                      "prefill_preempt", "reduced"):
+                      "prefill_preempt", "reduced", "paged_kv"):
             v = getattr(self, field)
             if not isinstance(v, bool):
                 raise ValueError(f"{field} must be a bool (got {v!r})")
+        if self.kv_evict_policy not in ("requeue", "truncate"):
+            raise ValueError(
+                f"kv_evict_policy must be 'requeue' or 'truncate' "
+                f"(got {self.kv_evict_policy!r})"
+            )
+        if self.max_context is not None:
+            if not isinstance(self.max_context, int) or self.max_context < self.max_len:
+                raise ValueError(
+                    f"max_context ({self.max_context!r}) must be an int >= "
+                    f"max_len ({self.max_len})"
+                )
+        if self.paged_kv:
+            if self.draft == "model":
+                raise ValueError(
+                    "paged_kv does not support the 'model' draft (the draft "
+                    "lane keeps a dense cache with its own admission path)"
+                )
+            if self.max_len % self.kv_block_size != 0:
+                raise ValueError(
+                    f"paged_kv requires max_len ({self.max_len}) to be a "
+                    f"multiple of kv_block_size ({self.kv_block_size})"
+                )
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
         if self.n_layers is not None and self.n_layers < 1:
@@ -256,6 +288,9 @@ class ServeConfig:
             prefill_preempt=self.prefill_preempt,
             per_row_depth=self.per_row_depth,
             slo_routing=self.slo_routing,
+            paged_kv=self.paged_kv,
+            max_context=self.max_context,
+            kv_evict_policy=self.kv_evict_policy,
         )
 
     def to_sim_config(self, **overrides):

@@ -193,10 +193,15 @@ class StreamServe:
                 temperature=self.config.temperature,
                 max_new_tokens=self.config.max_new_tokens,
             )
-        if len(prompt) + params.max_new_tokens > self.config.max_len:
+        # paged mode: pages, not per-slot rows, bound the context
+        ceiling = (self.config.max_context
+                   if self.config.paged_kv and self.config.max_context
+                   else self.config.max_len)
+        if len(prompt) + params.max_new_tokens > ceiling:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({params.max_new_tokens}) "
-                f"exceeds max_len ({self.config.max_len})"
+                f"exceeds {'max_context' if ceiling != self.config.max_len else 'max_len'}"
+                f" ({ceiling})"
             )
         req = Request(prompt=prompt, params=params,
                       slo_ttft=slo_ttft, slo_tpot=slo_tpot)

@@ -86,6 +86,63 @@ def _tree_insert_rows(big, small, slots: jax.Array):
     return jax.tree.map(ins, big, small)
 
 
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _paged_admit_step(chunk_prefill, params, cache, bt, tokens, lens, n_new):
+    """Bucketed paged admission: prefill suffixes straight into the page pool.
+
+    ``chunk_prefill`` (static — the lane model's bound step) ingests row ``b``'s
+    ``n_new[b]`` suffix tokens at cursor ``lens[b]``; with the row's block
+    table installed first, the KV lands directly in the decode lane's global
+    page pool — admission IS the transfer, there is no separate insert.  Rows
+    with a resident prefix start at ``lens = hit_tokens`` and skip recomputing
+    the shared pages entirely; idle occupied rows ride along with ``n_new = 0``
+    (their padding writes land past the committed length, positionally
+    shadowed until real decode tokens overwrite them).  Returns each row's
+    last-suffix-token logits for first-token sampling.
+    """
+    cache = dict(cache, bt=bt)
+    logits, cache = chunk_prefill(params, cache, tokens, lens, n_new)
+    S = logits.shape[1]
+    idx = jnp.clip(n_new - 1, 0, S - 1)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return last, cache
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _cache_set_bt(cache, bt):
+    """Install the host-assembled block tables into the donated decode cache
+    (the per-tick page-table sync; everything else is untouched aliasing)."""
+    return dict(cache, bt=bt)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _tree_insert_pages(cache, chunk_blocks, row, page_ids, slot, seq_len):
+    """Move one completed chunked-prefill row into the paged decode pool.
+
+    The dense chunk row (contiguous positions ``[0, L)``) is reshaped into
+    ``L / page_size`` pages and scattered to ``page_ids`` in every layer's
+    global pool (sentinel ids — the pool size — drop pages past the prompt);
+    ``cache["len"][slot]`` is seeded with the committed length.  Block tables
+    are host state and sync separately via :func:`_cache_set_bt`.
+    """
+    blocks = {}
+    for name in cache["blocks"]:
+        layer = dict(cache["blocks"][name])
+        for kv in ("k", "v"):
+            pool = layer[kv]                      # (nb, n_pages, ps, K, D)
+            src = chunk_blocks[name][kv]          # (nb, R, L, K, D)
+            nb, _, ps, Kh, D = pool.shape
+            rowdat = jax.lax.dynamic_index_in_dim(src, row, axis=1, keepdims=False)
+            pages = rowdat.reshape(nb, -1, ps, Kh, D)
+            layer[kv] = pool.at[:, page_ids].set(
+                pages.astype(pool.dtype), mode="drop"
+            )
+        blocks[name] = layer
+    new = dict(cache, blocks=blocks)
+    new["len"] = cache["len"].at[slot].set(seq_len.astype(jnp.int32), mode="drop")
+    return new
+
+
 def _terminal_record(req: Request, now: float, kv_evicted: bool = False,
                      cancelled: bool = False) -> RequestRecord:
     """Terminal RequestRecord (finish, cancel, either path) with SLO fields.
@@ -103,6 +160,7 @@ def _terminal_record(req: Request, now: float, kv_evicted: bool = False,
         token_times=list(req.token_times),
         worker_id=req.worker_id,
         kv_evicted=kv_evicted,
+        kv_requeued=req.kv_requeued,
         slo_ttft=req.slo_ttft,
         slo_tpot=req.slo_tpot,
         cancelled=cancelled,
@@ -130,18 +188,32 @@ class ModelLane:
     the only live handle.
     """
 
-    def __init__(self, cfg: ArchConfig, params, max_batch: int, max_len: int):
+    def __init__(self, cfg: ArchConfig, params, max_batch: int, max_len: int,
+                 *, paged: bool = False, kv_blocks: int = 0,
+                 kv_block_size: int = 16, max_context: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.cache = self.model.init_cache(max_batch, max_len)
+        self.paged = paged
+        self.kv_blocks = kv_blocks
+        self.kv_block_size = kv_block_size
+        self.max_context = (max_context or max_len) if paged else max_len
+        self.cache = self._init_cache()
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._commit = jax.jit(self._commit_fn, donate_argnums=(0,))
         self._prefill = jax.jit(
             functools.partial(self.model.prefill, max_len=max_len)
         )
+
+    def _init_cache(self):
+        if self.paged:
+            return self.model.init_paged_cache(
+                self.max_batch, self.kv_blocks, self.kv_block_size,
+                self.max_context,
+            )
+        return self.model.init_cache(self.max_batch, self.max_len)
 
     def _commit_fn(self, cache, n_new, accept_idx):
         # the pre-step length is recovered INSIDE the jit so callers never
@@ -165,7 +237,7 @@ class ModelLane:
         self.cache = self._commit(self.cache, n_new, accept_idx)
 
     def reset_cache(self) -> None:
-        self.cache = self.model.init_cache(self.max_batch, self.max_len)
+        self.cache = self._init_cache()
 
     @property
     def lengths(self) -> jax.Array:
@@ -208,6 +280,20 @@ class EngineConfig:
     # SLO-aware routing: FlowGuard TTFT-slack scoring, EDF prefill ordering,
     # and the shed-on-negative-slack admission guard
     slo_routing: bool = True
+    # ---- paged KV + radix prefix reuse -------------------------------------
+    # paged_kv=True replaces the per-slot dense (max_batch, max_len) KV cache
+    # with a global page pool (kv_blocks pages of kv_block_size tokens) plus
+    # per-row block tables: sequences grow lazily page-by-page (continuous
+    # batching under real memory pressure), context may exceed max_len up to
+    # max_context, and resident prefix pages are shared copy-on-write across
+    # requests (radix prefix cache — repeated prompts skip prefill).
+    paged_kv: bool = False
+    max_context: Optional[int] = None  # per-sequence token ceiling; None = max_len
+    # mid-decode pool exhaustion: "requeue" evicts the lowest-priority victim's
+    # pages and resubmits it (it restarts from scratch, recorded via
+    # kv_requeued); "truncate" is the pre-paging behaviour — finish the starved
+    # sequence early with kv_evicted=True
+    kv_evict_policy: str = "requeue"
 
     def resolved_spec_policy(self) -> str:
         if self.spec_policy is not None:
@@ -231,8 +317,69 @@ class StreamPair:
         self.worker_id = worker_id
         self.econf = econf
         self.monitor = monitor
-        self.lane = ModelLane(cfg, params, econf.max_batch, econf.max_len)
-        self.kv = KVCacheManager(econf.kv_blocks, econf.kv_block_size)
+        # length bucketing / chunking need padding (resp. cursor-offset
+        # continuation) to be invisible, which holds for causal attention but
+        # not for SSM state / enc-dec / frontends
+        arch_ok = (
+            not cfg.is_encdec
+            and cfg.frontend is None
+            and all(kind == "attn" for kind in cfg.layer_kinds())
+        )
+        # ---- paged KV gating ---------------------------------------------
+        # Paged decode shares the chunked-prefill position discipline (offset
+        # cursors, positional shadowing), so it inherits the same arch gate;
+        # sliding windows would additionally need ring-evicted pages, which
+        # the write-once page layout deliberately does not model.
+        self._paged = bool(econf.paged_kv)
+        if self._paged:
+            if not arch_ok or cfg.sliding_window is not None:
+                raise ValueError(
+                    "paged_kv requires an attention-only decoder without a "
+                    "sliding window (no enc-dec / SSM / frontend)"
+                )
+            if econf.max_len % econf.kv_block_size:
+                raise ValueError(
+                    f"paged_kv requires kv_block_size "
+                    f"({econf.kv_block_size}) to divide max_len "
+                    f"({econf.max_len}) — chunked rows insert whole pages"
+                )
+            if econf.max_context is not None and econf.max_context < econf.max_len:
+                raise ValueError(
+                    f"max_context ({econf.max_context}) must be >= max_len "
+                    f"({econf.max_len})"
+                )
+            if econf.kv_evict_policy not in ("requeue", "truncate"):
+                raise ValueError(
+                    f"kv_evict_policy must be 'requeue' or 'truncate' "
+                    f"(got {econf.kv_evict_policy!r})"
+                )
+        vb = econf.verify_buckets
+        # page headroom every row keeps ahead of its committed length: the
+        # deepest verify step writes bucket+1 tokens before the host can
+        # extend, and writes past a row's block table are silently dropped
+        self._kv_margin = (vb[-1] + 1) if vb else 9
+        self._max_context = (econf.max_context or econf.max_len) if self._paged \
+            else econf.max_len
+        self._pages_max = -(-self._max_context // econf.kv_block_size)
+        self.lane = ModelLane(
+            cfg, params, econf.max_batch, econf.max_len,
+            paged=self._paged, kv_blocks=econf.kv_blocks,
+            kv_block_size=econf.kv_block_size, max_context=self._max_context,
+        )
+        self.kv = KVCacheManager(
+            econf.kv_blocks, econf.kv_block_size,
+            serve_prefixes=self._paged,
+            max_seq_blocks=self._pages_max if self._paged else None,
+        )
+        # host mirror of the device block tables: admission/extension edit it,
+        # _sync_bt() pushes it once per decode tick when dirty
+        self._bt_host = np.full(
+            (econf.max_batch, self._pages_max), -1, np.int32
+        )
+        self._bt_dirty = False
+        # eviction→requeue callback (wired by PipeServeEngine to the
+        # scheduler's resubmit_or_fail); None falls back to truncate
+        self.requeue = None
         self.spec = resolve_spec_policy(
             econf.resolved_spec_policy(),
             config=econf.spec_config,
@@ -242,16 +389,15 @@ class StreamPair:
             econf.draft,
             DraftContext(cfg=cfg, econf=econf, draft_cfg=draft_cfg, draft_params=draft_params),
         )
-        # length bucketing / chunking need padding (resp. cursor-offset
-        # continuation) to be invisible, which holds for causal attention but
-        # not for SSM state / enc-dec / frontends
-        arch_ok = (
-            not cfg.is_encdec
-            and cfg.frontend is None
-            and all(kind == "attn" for kind in cfg.layer_kinds())
-        )
+        if self._paged and type(self.draft).on_admit is not EngineDraft.on_admit:
+            raise ValueError(
+                "paged_kv is incompatible with drafts that mirror admission "
+                "state (draft='model'); use 'ngram'/'none' or disable paging"
+            )
         self._bucketed = econf.prefill_buckets and arch_ok
-        self._len_buckets = _pow2_buckets(econf.prefill_bucket_min, econf.max_len)
+        self._len_buckets = _pow2_buckets(
+            econf.prefill_bucket_min, self._max_context
+        )
         self._admit_buckets = _pow2_buckets(1, max(econf.admit_batch, 1))
         # ---- chunked prefill --------------------------------------------------
         # One (R, C) chunk step — jitted once — replaces the whole bucket
@@ -360,18 +506,65 @@ class StreamPair:
 
     # ---------------------------------------------------------------- prefill
     def reserve_kv(self, req: Request) -> bool:
-        """Allocate KV blocks for a request ahead of its (batched) prefill."""
-        alloc = self.kv.allocate_sequence(
-            req.request_id, list(req.prompt), extra_tokens=req.params.max_new_tokens
-        )
+        """Allocate KV blocks for a request ahead of its (batched) prefill.
+
+        Dense mode reserves the worst case (prompt + max_new) up front; paged
+        mode reserves only prompt + margin and grows page-by-page as the
+        sequence decodes (continuous batching under real memory pressure).
+        Paged chunked ingest opts out of prefix sharing (``share=False``) —
+        chunk rows recompute from position 0, so resident pages cannot be
+        skipped mid-row.
+        """
+        if self._paged:
+            alloc = self.kv.allocate_sequence(
+                req.request_id, list(req.prompt),
+                extra_tokens=self._kv_margin, share=self._chunk is None,
+            )
+        else:
+            alloc = self.kv.allocate_sequence(
+                req.request_id, list(req.prompt),
+                extra_tokens=req.params.max_new_tokens,
+            )
         if alloc is None:
             return False  # KV pool exhausted — stays queued
         req.cache_hit_tokens = alloc.shared_blocks * self.kv.pool.block_size
         return True
 
+    def prompt_fits(self, req: Request) -> bool:
+        """Whether a request can EVER be admitted on this pair.  A prompt over
+        the paged context ceiling would requeue forever at the queue head, so
+        the engine fails it terminally instead."""
+        if not self._paged:
+            return True
+        if len(req.prompt) + self._kv_margin > self._pages_max * self.econf.kv_block_size:
+            return False
+        if self._chunk is not None and len(req.prompt) > self.econf.max_len:
+            return False  # chunk rows are max_len-sized dense staging
+        return True
+
+    def _refresh_bt_row(self, slot: int, request_id: str) -> None:
+        """Mirror a sequence's current block ids into the host block table."""
+        bids = self.kv.seqs[request_id].block_ids
+        row = self._bt_host[slot]
+        if len(bids) < row.shape[0]:
+            row[len(bids):] = -1
+        row[: len(bids)] = bids
+        self._bt_dirty = True
+
+    def _sync_bt(self) -> None:
+        """Push the host block-table mirror to the device cache (one transfer
+        per tick, only when admission/extension/eviction changed a row)."""
+        if self._bt_dirty:
+            self.lane.cache = _cache_set_bt(
+                self.lane.cache, jnp.asarray(self._bt_host)
+            )
+            self._bt_dirty = False
+
     def admit(self, reqs: List[Request], now: float) -> None:
         """Prefill a batch of KV-reserved requests in ONE bucketed call and
         transfer their KV into free decode slots (one bulk device_get)."""
+        if self._paged:
+            return self._admit_paged(reqs, now)
         slots = self.free_slots()[: len(reqs)]
         assert len(slots) == len(reqs), "admit() requires a free slot per request"
         for req in reqs:
@@ -413,6 +606,62 @@ class StreamPair:
             self.histories[slots[i]] = [*req.prompt, tok]
             self._spec_reset_slot(slots[i])  # fresh request, fresh EMA
 
+    def _admit_paged(self, reqs: List[Request], now: float) -> None:
+        """Paged admission: ONE bucketed suffix-prefill straight into pages.
+
+        Each request's resident-prefix pages (``cache_hit_tokens``, reserved
+        by ``reserve_kv``) are skipped outright — its row starts at cursor
+        ``lens = hit`` and only the suffix is recomputed.  The full decode
+        batch rides through the step (idle rows at their committed cursor
+        with ``n_new = 0``), block tables install inside the jit, and the KV
+        lands directly in the decode lane's page pool: admission and transfer
+        are the same write.
+        """
+        slots = self.free_slots()[: len(reqs)]
+        assert len(slots) == len(reqs), "admit() requires a free slot per request"
+        for req in reqs:
+            req.state = RequestState.PREFILLING
+            req.t_prefill_start = now
+        B = self.econf.max_batch
+        suffixes = [len(r.prompt) - r.cache_hit_tokens for r in reqs]
+        S = self._bucket(max(suffixes), self._len_buckets)
+        tokens = np.zeros((B, S), np.int32)
+        lens = np.zeros((B,), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        for b, occupant in enumerate(self.slot_req):
+            if occupant is not None:  # idle rows hold their committed cursor
+                lens[b] = len(occupant.prompt) + len(occupant.output_tokens) - 1
+        for req, slot in zip(reqs, slots):
+            suffix = list(req.prompt[req.cache_hit_tokens:])
+            tokens[slot, : len(suffix)] = suffix
+            lens[slot] = req.cache_hit_tokens
+            n_new[slot] = len(suffix)
+            self._refresh_bt_row(slot, req.request_id)
+        for req in reqs:
+            req.state = RequestState.TRANSFERRING
+        last, self.lane.cache = _paged_admit_step(
+            self.lane.model.chunk_prefill, self.lane.params, self.lane.cache,
+            jnp.asarray(self._bt_host), jnp.asarray(tokens),
+            jnp.asarray(lens), jnp.asarray(n_new),
+        )
+        self._bt_dirty = False  # the admit step installed the fresh tables
+        self.key, sk = jax.random.split(self.key)
+        first = sample(sk, last, self.econf.temperature).astype(jnp.int32)
+        slots_dev = jnp.asarray(np.asarray(slots, np.int32))
+        first_rows = first[slots_dev]
+        self.pending = self.pending.at[slots_dev].set(first_rows, mode="drop")
+        first_h = np.asarray(jax.device_get(first_rows))  # the ONE admit round-trip
+        for i, req in enumerate(reqs):
+            tok = int(first_h[i])
+            req.state = RequestState.DECODING
+            req.t_prefill_end = now
+            req.t_first_token = now
+            req.output_tokens.append(tok)
+            req.token_times.append(now)
+            self.slot_req[slots[i]] = req
+            self.histories[slots[i]] = [*req.prompt, tok]
+            self._spec_reset_slot(slots[i])
+
     # --------------------------------------------------------- chunked prefill
     def _chunk_pull(self, scheduler, now: float) -> None:
         """Admit queued requests into free chunk rows.
@@ -434,6 +683,9 @@ class StreamPair:
             req = scheduler.next_for_prefill(wid, now)
             if req is None:
                 return
+            if not self.prompt_fits(req):
+                scheduler.fail_request(req, now, "exceeds_max_context")
+                continue
             if not self.reserve_kv(req):
                 scheduler.prefill_queues[wid].appendleft(req)
                 return  # KV pool exhausted — stays queued
@@ -494,9 +746,25 @@ class StreamPair:
         sample the first token."""
         slot = self.free_slots()[0]  # guaranteed by the _chunk_pull budget
         req.state = RequestState.TRANSFERRING
-        slot_ids = np.full((len(self.chunk_rows),), self.econf.max_batch, np.int32)
-        slot_ids[row] = slot
-        self.lane.insert_rows(jnp.asarray(slot_ids), self.chunk_cache)
+        if self._paged:
+            # the dense chunk row becomes whole pages in the global pool;
+            # pages past the prompt keep the pool-size sentinel (dropped)
+            ps = self.econf.kv_block_size
+            bids = self.kv.seqs[req.request_id].block_ids
+            n_pages = -(-len(req.prompt) // ps)
+            page_ids = np.full((self.econf.max_len // ps,),
+                               self.kv.pool.n_blocks, np.int32)
+            page_ids[:n_pages] = bids[:n_pages]
+            self.lane.cache = _tree_insert_pages(
+                self.lane.cache, self.chunk_cache["blocks"], jnp.int32(row),
+                jnp.asarray(page_ids), jnp.int32(slot),
+                jnp.int32(len(req.prompt)),
+            )
+            self._refresh_bt_row(slot, req.request_id)
+        else:
+            slot_ids = np.full((len(self.chunk_rows),), self.econf.max_batch, np.int32)
+            slot_ids[row] = slot
+            self.lane.insert_rows(jnp.asarray(slot_ids), self.chunk_cache)
         self.key, sk = jax.random.split(self.key)
         first = sample(sk, last_logits, self.econf.temperature).astype(jnp.int32)
         self.pending = self.pending.at[jnp.asarray([slot])].set(first, mode="drop")
@@ -529,6 +797,8 @@ class StreamPair:
         active = self.active_slots()
         if not active:
             return 0
+        if self._paged:
+            self._sync_bt()  # page-table edits land before any device step
         B = self.econf.max_batch
         throughput = self.monitor.workers[self.worker_id].recent_throughput
         decision: SpecDecision = self.spec.adapt(
@@ -550,6 +820,11 @@ class StreamPair:
         rows = np.minimum(rows, self.draft.max_depth)
         if vb:
             rows = np.minimum(rows, vb[-1])
+        if self._paged:
+            # the deepest verify writes bucket+1 tokens before the host can
+            # extend a block table — depth past the page margin would drop
+            # accepted KV on the floor
+            rows = np.minimum(rows, self._kv_margin - 1)
         k = int(rows.max())
         active_mask = np.zeros((B,), bool)
         active_mask[active] = True
@@ -630,6 +905,10 @@ class StreamPair:
         """Host-side bookkeeping for one slot's freshly decoded tokens (the
         device values were already fetched in one bulk transfer upstream)."""
         req = self.slot_req[slot]
+        if req is None:
+            return 0  # evicted this very tick by an earlier slot's grant
+        if self._paged:
+            return self._emit_paged(slot, req, tokens, now)
         granted = self.kv.extend_up_to(req.request_id, len(tokens))
         count = 0
         for t in tokens[:granted]:
@@ -646,15 +925,97 @@ class StreamPair:
             self._finish(slot, now, kv_evicted=evicted)
         return count
 
+    def _emit_paged(self, slot: int, req: Request, tokens: List[int],
+                    now: float) -> int:
+        """Paged emit: grant pages for the step's committed tokens, feed the
+        incremental prefix hash, evict-and-requeue on pool pressure, and
+        restore the page margin for the next decode step."""
+        # the device committed stream trails the emitted stream by one: the
+        # newest token is pending (sampled, not yet ingested), so this grant
+        # covers [previous pending token, *accepted draft tokens]
+        committed = [req.output_tokens[-1], *tokens[:-1]]
+        need = len(tokens)
+        granted = self.kv.extend_up_to(req.request_id, need, tokens=committed)
+        while granted < need:
+            victim = self._pick_victim(slot)
+            if victim is None:
+                break
+            self._requeue_slot(victim, now)
+            granted += self.kv.extend_up_to(
+                req.request_id, need - granted, tokens=committed[granted:]
+            )
+        count = 0
+        for t in tokens[:granted]:
+            if req.is_done():
+                break
+            req.output_tokens.append(t)
+            req.token_times.append(now)
+            self.histories[slot].append(t)
+            count += 1
+        truncated = granted < need and not req.is_done()
+        if req.is_done() or truncated:
+            self._finish(slot, now, kv_evicted=truncated)
+            return count
+        while True:
+            status, _ = self.kv.ensure_margin(req.request_id, self._kv_margin)
+            if status == "ok":
+                break
+            if status == "oom":
+                victim = self._pick_victim(slot)
+                if victim is not None:
+                    self._requeue_slot(victim, now)
+                    continue
+            # context ceiling, or pool dry with nobody left to evict: finish
+            # gracefully (truncated) — the same fallback as the dense path
+            self._finish(slot, now, kv_evicted=True)
+            return count
+        self._refresh_bt_row(slot, req.request_id)
+        return count
+
+    def _pick_victim(self, protect: int) -> Optional[int]:
+        """Eviction victim under page pressure: the lowest-priority active
+        slot other than ``protect`` — latest EDF deadline first (best-effort
+        requests sort last, so they yield pages to deadline-carrying work),
+        ties broken by the highest slot index (deterministic).  None when
+        eviction is disabled, unwired, or there is nobody else to evict
+        (self-eviction would just thrash: the re-admitted prompt regrows
+        into the same dry pool)."""
+        if self.econf.kv_evict_policy != "requeue" or self.requeue is None:
+            return None
+        cands = [s for s in self.active_slots() if s != protect]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (edf_deadline(self.slot_req[s]), s))
+
+    def _requeue_slot(self, slot: int, now: float) -> None:
+        """Evict a decode slot's pages and resubmit its request (it restarts
+        from scratch — decode state is positional, not checkpointable)."""
+        req = self.slot_req[slot]
+        self.kv.free_sequence(req.request_id)
+        self._clear_slot(slot)
+        req.output_tokens.clear()
+        req.token_times.clear()
+        req.spec_depths.clear()
+        req.kv_requeued += 1
+        req.state = RequestState.QUEUED
+        self.requeue(req, now)
+
+    def _clear_slot(self, slot: int) -> None:
+        """Release a slot's host bookkeeping (and its block-table row)."""
+        self.slot_req[slot] = None
+        self.histories[slot] = []
+        self._spec_reset_slot(slot)
+        if self._paged:
+            self._bt_host[slot, :] = -1
+            self._bt_dirty = True
+
     def _finish(self, slot: int, now: float, kv_evicted: bool = False) -> None:
         req = self.slot_req[slot]
         req.state = RequestState.FINISHED
         req.t_end = now
         self.kv.free_sequence(req.request_id)
         self.monitor.complete_request(_terminal_record(req, now, kv_evicted=kv_evicted))
-        self.slot_req[slot] = None
-        self.histories[slot] = []
-        self._spec_reset_slot(slot)
+        self._clear_slot(slot)
 
     # ----------------------------------------------------------------- warmup
     def warmup(self, max_prompt_len: Optional[int] = None) -> int:
@@ -679,11 +1040,42 @@ class StreamPair:
                 jnp.zeros((R, C), jnp.int32), zeros, zeros,
                 np.int32(0), np.int32(0),
             )
-            self.lane.insert_rows(
-                jnp.full((R,), econf.max_batch, jnp.int32), self.chunk_cache
-            )
+            if self._paged:
+                # sentinel page ids + OOB slot: every write dropped
+                self.lane.cache = _tree_insert_pages(
+                    self.lane.cache, self.chunk_cache["blocks"], jnp.int32(0),
+                    jnp.full((econf.max_len // econf.kv_block_size,),
+                             econf.kv_blocks, jnp.int32),
+                    jnp.int32(econf.max_batch), jnp.int32(0),
+                )
+                self.lane.cache = _cache_set_bt(
+                    self.lane.cache, jnp.asarray(self._bt_host)
+                )
+            else:
+                self.lane.insert_rows(
+                    jnp.full((R,), econf.max_batch, jnp.int32), self.chunk_cache
+                )
             sample(key, last, econf.temperature)
             self.chunk_cache = self.lane.model.init_cache(R, econf.max_len)
+            n += 1
+        elif self._paged:
+            # every suffix-length bucket through the paged admit step: the
+            # all-(-1) tables drop every page write while the shapes compile
+            bt = jnp.asarray(self._bt_host)
+            hi = self._bucket(
+                min(max_prompt_len or self._max_context, self._max_context),
+                self._len_buckets,
+            )
+            zeros_b = jnp.zeros((B,), jnp.int32)
+            for S in (b for b in self._len_buckets if b <= hi):
+                last, self.lane.cache = _paged_admit_step(
+                    self.lane.model.chunk_prefill, self.lane.params,
+                    self.lane.cache, bt, jnp.zeros((B, S), jnp.int32),
+                    zeros_b, zeros_b,
+                )
+                sample(key, last, econf.temperature)
+                n += 1
+            self.lane.cache = _cache_set_bt(self.lane.cache, bt)
             n += 1
         elif self._bucketed:
             hi = self._bucket(
@@ -823,7 +1215,7 @@ class PipeServeEngine:
         # gate disabled chunking, clamped otherwise) so chunk-per-tick
         # pricing matches what the prefill lane actually serves.
         estimator = None
-        if self.econf.slo_routing:
+        if self.econf.slo_routing or self.econf.paged_kv:
             estimator = PrefillDelayEstimator(
                 cfg,
                 max_batch=self.econf.max_batch,
@@ -835,6 +1227,13 @@ class PipeServeEngine:
             slo_routing=self.econf.slo_routing,
             delay_estimator=estimator.ticks if estimator else None,
         )
+        self._prefix_estimator = estimator
+        if self.econf.paged_kv:
+            # prefix-hit-aware routing: probe every pair's radix index per
+            # submission; page pressure evicts through the scheduler
+            self.scheduler.prefix_probe = self._prefix_score
+            for pair in self.pairs:
+                pair.requeue = self.scheduler.resubmit_or_fail
         if any(pair._chunk is not None for pair in self.pairs):
             # routing must see requests parked in chunk rows: they left the
             # prefill queue but still owe the lane one tick per chunk left
@@ -845,6 +1244,15 @@ class PipeServeEngine:
 
     def _clock(self) -> float:
         return self._now
+
+    def _prefix_score(self, worker_id: int, req) -> float:
+        """Expected prefill saving from a pair's resident prefix pages for a
+        new request, as the cost model's saved-work fraction in [0, 1] — the
+        routing probe behind FlowGuard's prefix-hit term."""
+        hit = self.pairs[worker_id].kv.match_prefix(list(req.prompt))
+        if not hit or self._prefix_estimator is None:
+            return 0.0
+        return self._prefix_estimator.saved_frac(len(req.prompt), hit)
 
     def _chunk_backlog_ticks(self, worker_id: int) -> float:
         """Remaining chunked-prefill lane turns owed by a pair's chunk rows
@@ -878,10 +1286,8 @@ class PipeServeEngine:
             for slot, req in enumerate(pair.slot_req):
                 if req is None or req.request_id != request_id:
                     continue
-                pair.slot_req[slot] = None
-                pair.histories[slot] = []
-                pair._spec_reset_slot(slot)
                 pair.kv.free_sequence(req.request_id)
+                pair._clear_slot(slot)
                 req.state = RequestState.CANCELLED
                 req.t_end = self._now
                 self.monitor.complete_request(
@@ -914,10 +1320,8 @@ class PipeServeEngine:
         for slot, req in enumerate(pair.slot_req):
             if req is None:
                 continue
-            pair.slot_req[slot] = None
-            pair.histories[slot] = []
-            pair._spec_reset_slot(slot)
             pair.kv.free_sequence(req.request_id)
+            pair._clear_slot(slot)
             orphans.append(req)
         if pair._chunk is not None:
             for row, req in enumerate(pair.chunk_rows):
@@ -957,6 +1361,11 @@ class PipeServeEngine:
                         req = self.scheduler.next_for_prefill(wid, self._now)
                         if req is None:
                             break
+                        if not pair.prompt_fits(req):
+                            self.scheduler.fail_request(
+                                req, self._now, "exceeds_max_context"
+                            )
+                            continue
                         if not pair.reserve_kv(req):
                             self.scheduler.prefill_queues[wid].appendleft(req)
                             blocked = True
@@ -1010,6 +1419,9 @@ class PipeServeEngine:
 
         sizes = {
             "tree_insert": _tree_insert_rows._cache_size(),
+            "paged_admit": _paged_admit_step._cache_size(),
+            "set_bt": _cache_set_bt._cache_size(),
+            "insert_pages": _tree_insert_pages._cache_size(),
             "verify_tokens": speculative.verify_tokens._cache_size(),
             "sample": sampling.sample._cache_size(),
             "sample_probs": sampling.sample_probs._cache_size(),

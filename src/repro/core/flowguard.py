@@ -36,6 +36,11 @@ class FlowGuardConfig:
     # (outside the Eq-1 convex combination: zero for best-effort traffic,
     # so the paper's scoring is unchanged when no SLOs are in play)
     slo_weight: float = 0.5
+    # weight of the additive prefix-hit term (paged KV only): the scheduler
+    # probes each worker's radix index and passes the cost-model-priced
+    # fraction of prefill work a resident prefix would save, in [0, 1].
+    # Zero when no worker holds a matching prefix, so Eq 1 is unchanged.
+    prefix_weight: float = 0.3
 
     def __post_init__(self) -> None:
         s = self.alpha_cache + self.alpha_memory + self.alpha_queue + self.alpha_load
@@ -43,6 +48,8 @@ class FlowGuardConfig:
             raise ValueError(f"routing weights must sum to 1 (got {s})")
         if self.slo_weight < 0.0:
             raise ValueError(f"slo_weight must be >= 0 (got {self.slo_weight})")
+        if self.prefix_weight < 0.0:
+            raise ValueError(f"prefix_weight must be >= 0 (got {self.prefix_weight})")
 
 
 class FlowGuard:
@@ -100,6 +107,7 @@ class FlowGuard:
         healthy: Optional[Iterable[int]] = None,
         request=None,
         queue_delays: Optional[Dict[int, float]] = None,
+        prefix_scores: Optional[Dict[int, float]] = None,
     ) -> Tuple[int, Dict[int, float]]:
         """Pick the target stream pair.  Returns (worker_id, scores).
 
@@ -108,7 +116,10 @@ class FlowGuard:
         candidate is overloaded or stale (Eq 4).  When the scheduler passes
         the ``request`` and per-worker ``queue_delays`` (estimated ticks of
         queued prefill work), SLO-carrying requests are additionally steered
-        toward the worker with the most TTFT slack.
+        toward the worker with the most TTFT slack.  ``prefix_scores`` maps
+        worker id to the saved-prefill fraction its resident radix prefix
+        would buy this request; a nonzero entry pulls the request toward
+        the holding worker by up to ``prefix_weight``.
         """
         candidates = list(metrics.keys() if healthy is None else healthy)
         if not candidates:
@@ -124,6 +135,9 @@ class FlowGuard:
             scores[i] = self.score(m)
             if queue_delays is not None:
                 scores[i] += self.slo_slack_term(request, queue_delays.get(i, 0.0), now)
+            if prefix_scores is not None:
+                hit = min(max(prefix_scores.get(i, 0.0), 0.0), 1.0)
+                scores[i] += self.config.prefix_weight * hit
             avail.append(i)
         if not avail:
             # Eq 4 fallback: least-loaded queue among healthy candidates
@@ -140,7 +154,7 @@ class RoundRobinRouter:
         self._next = 0
 
     def select(self, metrics, now, healthy=None, request=None,
-               queue_delays=None) -> Tuple[int, Dict[int, float]]:
+               queue_delays=None, prefix_scores=None) -> Tuple[int, Dict[int, float]]:
         candidates = sorted(metrics.keys() if healthy is None else healthy)
         pick = candidates[self._next % len(candidates)]
         self._next += 1

@@ -47,6 +47,9 @@ class RequestRecord:
     # the sequence was truncated mid-decode because the KV block pool ran dry
     # (finished gracefully rather than over-committing accounting)
     kv_evicted: bool = False
+    # times the paged pool evicted + re-queued this request mid-decode
+    # (continuous batching under memory pressure; 0 on the dense path)
+    kv_requeued: int = 0
     # ---- SLO control plane ------------------------------------------------
     slo_ttft: Optional[float] = None   # targets carried by the request
     slo_tpot: Optional[float] = None

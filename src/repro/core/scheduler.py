@@ -34,7 +34,7 @@ from repro.serving.request import Request, RequestState
 
 class Router(Protocol):
     def select(self, metrics, now, healthy=None, request=None,
-               queue_delays=None) -> Tuple[int, Dict[int, float]]: ...
+               queue_delays=None, prefix_scores=None) -> Tuple[int, Dict[int, float]]: ...
 
 
 def edf_deadline(req: Request) -> float:
@@ -74,9 +74,13 @@ class StreamScheduler:
         # that ignored them would see a saturated lane as idle
         self.inflight_depth: Optional[Callable[[int], int]] = None
         self.inflight_delay: Optional[Callable[[int], float]] = None
+        # paged-KV hook (wired by the engine): probes a pair's radix index for
+        # a resident prefix and prices the hit as a saved-prefill fraction
+        self.prefix_probe: Optional[Callable[[int, Request], float]] = None
         # routers predating the SLO plumbing (custom plugins) keep working:
         # only pass the extra kwargs to routers that declare them
         self._router_slo_aware = self._accepts_slo_kwargs(self.router)
+        self._router_prefix_aware = self._accepts_prefix_kwarg(self.router)
 
     @staticmethod
     def _accepts_slo_kwargs(router: Router) -> bool:
@@ -91,6 +95,19 @@ class StreamScheduler:
             return True
         names = {p.name for p in params}
         return {"request", "queue_delays"} <= names
+
+    @staticmethod
+    def _accepts_prefix_kwarg(router: Router) -> bool:
+        import inspect
+
+        try:
+            sig = inspect.signature(router.select)
+        except (TypeError, ValueError):
+            return False
+        params = sig.parameters.values()
+        if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+            return True
+        return "prefix_scores" in {p.name for p in params}
 
     # ---------------------------------------------------------------- routing
     def queue_delay(self, worker_id: int) -> float:
@@ -110,14 +127,19 @@ class StreamScheduler:
         # FlowGuard reads queue depth live (Alg 2: fresh values)
         for i in healthy:
             self.monitor.update_worker(i, queue_depth=self.queue_depth(i))
+        extra = {}
+        if self.prefix_probe is not None and self._router_prefix_aware:
+            extra["prefix_scores"] = {i: self.prefix_probe(i, req) for i in healthy}
         if self.slo_routing and self._router_slo_aware:
             delays = {i: self.queue_delay(i) for i in healthy}
             worker, _ = self.router.select(
                 self.monitor.snapshot(), now, healthy,
-                request=req, queue_delays=delays,
+                request=req, queue_delays=delays, **extra,
             )
         else:
-            worker, _ = self.router.select(self.monitor.snapshot(), now, healthy)
+            worker, _ = self.router.select(
+                self.monitor.snapshot(), now, healthy, **extra
+            )
         req.worker_id = worker
         req.state = RequestState.QUEUED
         # stamp only unset arrivals — an explicit t=0 arrival is legitimate
@@ -168,6 +190,7 @@ class StreamScheduler:
                 slo_ttft=req.slo_ttft,
                 slo_tpot=req.slo_tpot,
                 slo_infeasible=slo_infeasible,
+                kv_requeued=getattr(req, "kv_requeued", 0),
             )
         )
 

@@ -182,3 +182,149 @@ def decode_attention_pallas(
 
     out = out[:, :, :TG].reshape(B, K, T, G, D).transpose(0, 2, 1, 3, 4)
     return out.reshape(B, T, H, D)
+
+
+def _paged_decode_kernel(
+    bt_ref,       # (B, P) block table, scalar-prefetched (drives the DMA plan)
+    q_ref,        # (1, 1, TGp, D)
+    len_ref,      # (1, 1) cache_len (already includes the T new tokens)
+    k_ref,        # (1, ps, 1, D) one page of one KV head
+    v_ref,        # (1, ps, 1, D)
+    o_ref,        # (1, 1, TGp, D)
+    m_ref, l_ref, acc_ref,
+    *,
+    T: int,
+    G: int,
+    scale: float,
+    window: Optional[int],
+    page_size: int,
+):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    n_p = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    TGp = q_ref.shape[2]
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (TGp, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (ps, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TGp, ps)
+
+    cache_len = len_ref[0, 0]
+    page = bt_ref[b, ip]
+    row = jax.lax.broadcasted_iota(jnp.int32, (TGp, page_size), 0)
+    t = row // G                                        # token index (pad rows -> t >= T)
+    q_pos = cache_len - T + t
+    # page slot s of row-page-index ip holds absolute position ip*ps + s by
+    # construction (positions are written exactly once, no ring wrap), so no
+    # kv_pos pool is needed; page < 0 means the table entry is unallocated
+    kv_pos = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (TGp, page_size), 1
+    )
+    mask = (page >= 0) & (kv_pos <= q_pos) & (row < T * G)
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ip == n_p - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "scale", "interpret"),
+)
+def decode_attention_paged_pallas(
+    q: jax.Array,          # (B, T, H, D)
+    k_pages: jax.Array,    # (n_pages, ps, K, D) global page pool
+    v_pages: jax.Array,
+    cache_len: jax.Array,  # (B,) valid length INCLUDING the T new tokens
+    block_tables: jax.Array,  # (B, P) page indices, -1 = unallocated
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-table-indexed flash decode over a global page pool.
+
+    Same tiling as :func:`decode_attention_pallas` except the sequential
+    axis walks the per-row block table: grid step ``(b, h, ip)`` streams
+    page ``block_tables[b, ip]`` of the pool.  The table is scalar-prefetched
+    (``PrefetchScalarGridSpec``) so the page index is known before the DMA
+    issues — the standard PagedAttention TPU pattern.  Unallocated entries
+    (-1) clamp to page 0 and mask to -inf, costing one redundant page fetch
+    per hole rather than a branch.
+    """
+    B, T, H, D = q.shape
+    n_pages, ps, K, _ = k_pages.shape
+    P = block_tables.shape[1]
+    assert H % K == 0
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+
+    TG = T * G
+    TGp = max(8, -(-TG // 8) * 8)  # pad query rows to a multiple of 8 lanes
+    qh = q.reshape(B, T, K, G, D).transpose(0, 2, 1, 3, 4).reshape(B, K, TG, D)
+    if TGp != TG:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, TGp - TG), (0, 0)))
+
+    clen = cache_len.astype(jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, T=T, G=G, scale=scale, window=window, page_size=ps
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, TGp, D), lambda b, h, ip, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ip, bt: (b, 0)),
+            pl.BlockSpec(
+                (1, ps, 1, D),
+                lambda b, h, ip, bt: (jnp.maximum(bt[b, ip], 0), 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, 1, D),
+                lambda b, h, ip, bt: (jnp.maximum(bt[b, ip], 0), 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, TGp, D), lambda b, h, ip, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((TGp, 1), jnp.float32),
+            pltpu.VMEM((TGp, 1), jnp.float32),
+            pltpu.VMEM((TGp, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, TGp, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention_paged",
+    )(block_tables.astype(jnp.int32), qh, clen, k_pages, v_pages)
+
+    out = out[:, :, :TG].reshape(B, K, T, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, H, D)

@@ -71,6 +71,31 @@ def decode_attention(
     )
 
 
+def decode_attention_paged(
+    q,
+    k_pages,
+    v_pages,
+    cache_len,
+    block_tables,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    force_ref: bool = False,
+    interpret: bool = False,
+):
+    """Decode-step attention over a paged KV pool via per-row block tables."""
+    if not force_ref and (interpret or _use_pallas()):
+        from repro.kernels import decode_attention as da
+
+        return da.decode_attention_paged_pallas(
+            q, k_pages, v_pages, cache_len, block_tables, window=window,
+            scale=scale, interpret=interpret,
+        )
+    return ref.decode_attention_paged(
+        q, k_pages, v_pages, cache_len, block_tables, window=window, scale=scale,
+    )
+
+
 def ssd_scan(
     x,
     dt,

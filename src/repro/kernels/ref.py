@@ -199,6 +199,44 @@ def decode_attention(
     return out.reshape(B, T, H, D).astype(q.dtype)
 
 
+def decode_attention_paged(
+    q: jax.Array,          # (B, T, H, D)
+    k_pages: jax.Array,    # (n_pages, ps, K, D) global page pool
+    v_pages: jax.Array,
+    cache_len: jax.Array,  # (B,) valid length INCLUDING the T new tokens
+    block_tables: jax.Array,  # (B, P) page indices into the pool, -1 = unset
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Block-table-indexed decode attention over a global page pool.
+
+    Gathers each row's pages into a contiguous (B, P*ps) view and delegates
+    to :func:`decode_attention`.  Slot ``s`` of row-page-index ``i`` holds
+    absolute position ``i*ps + s`` by construction (positions are written
+    exactly once in the paged layout — no ring wrap), so ``kv_positions`` is
+    implicit; unallocated table entries (-1) mask their whole page.
+    """
+    n_pages, ps, K, D = k_pages.shape
+    B, P = block_tables.shape
+    idx = (
+        jnp.clip(block_tables, 0, n_pages - 1)[:, :, None] * ps
+        + jnp.arange(ps)[None, None, :]
+    ).reshape(B, P * ps)
+    k = k_pages.reshape(n_pages * ps, K, D)[idx]  # (B, S, K, D)
+    v = v_pages.reshape(n_pages * ps, K, D)[idx]
+    kv_pos = jnp.where(
+        jnp.repeat(block_tables, ps, axis=1) >= 0,
+        jnp.arange(P * ps, dtype=jnp.int32)[None, :],
+        -1,
+    )
+    return decode_attention(
+        q, k, v, cache_len, kv_positions=kv_pos, window=window, scale=scale,
+        causal=causal,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD (state-space duality) — chunked scan
 # ---------------------------------------------------------------------------

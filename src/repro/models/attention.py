@@ -288,18 +288,59 @@ def _decode_attention_cp(
     return out, {"k": ck, "v": cv, "kv_pos": cp}
 
 
+def write_pages(
+    pool_k: jax.Array,
+    pool_v: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    block_tables: jax.Array,
+    start_pos: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter T new KV entries into a global page pool via block tables.
+
+    pool_k/v: (n_pages, ps, K, D); k/v_new: (B, T, K, D); block_tables:
+    (B, P) page indices (-1 = unallocated); start_pos: (B,).  Position ``p``
+    of row ``b`` lands in slot ``p % ps`` of page ``block_tables[b, p // ps]``
+    — positions are written exactly once (no ring wrap; the block table is
+    sized for the full context), so the paged decode mask can reconstruct
+    positions from page indices alone.  Writes whose page entry is missing
+    (or beyond the table) drop: inactive rows and bucket padding never touch
+    live pages.
+    """
+    n_pages, ps, K, D = pool_k.shape
+    B, T = k_new.shape[:2]
+    P = block_tables.shape[1]
+    pos = start_pos[:, None] + jnp.arange(T)[None, :]          # (B, T)
+    pidx = pos // ps
+    page = jnp.take_along_axis(block_tables, jnp.clip(pidx, 0, P - 1), axis=1)
+    page = jnp.where(pidx < P, page, -1)
+    flat = jnp.where(page >= 0, page * ps + pos % ps, n_pages * ps)  # OOB drops
+    flat = flat.reshape(B * T)
+    kf = pool_k.reshape(n_pages * ps, K, D).at[flat].set(
+        k_new.reshape(B * T, K, D).astype(pool_k.dtype), mode="drop"
+    )
+    vf = pool_v.reshape(n_pages * ps, K, D).at[flat].set(
+        v_new.reshape(B * T, K, D).astype(pool_v.dtype), mode="drop"
+    )
+    return kf.reshape(n_pages, ps, K, D), vf.reshape(n_pages, ps, K, D)
+
+
 def attention_decode(
     p: dict,
     cfg: ArchConfig,
     x: jax.Array,
     cache: dict,
     cache_len: jax.Array,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, dict]:
     """Decode T new tokens (T >= 1 for speculative verification).
 
     ``cache`` = {"k", "v", "kv_pos"}; ``cache_len`` (B,) is the committed
     length BEFORE these tokens.  Query i sits at absolute position
-    cache_len + i.
+    cache_len + i.  With ``block_tables`` the cache is instead the global
+    page pool {"k", "v"}: (n_pages, ps, K, D) — writes and attention go
+    through the per-row tables (paged layout; requires full attention, the
+    engine gates SWA off).
     """
     B, T, _ = x.shape
     q = _project_q(p, cfg, x)
@@ -307,6 +348,14 @@ def attention_decode(
     pos = cache_len[:, None] + jnp.arange(T)[None, :]
     q = rope(q, pos, cfg.rope_theta)
     k = rope(k, pos, cfg.rope_theta)
+
+    if block_tables is not None:
+        ck, cv = write_pages(cache["k"], cache["v"], k, v, block_tables, cache_len)
+        out = ops.decode_attention_paged(
+            q, ck, cv, cache_len + T, block_tables, window=cfg.sliding_window
+        )
+        out = _project_out(p, cfg, out, "bthe,hed->btd")
+        return out, {"k": ck, "v": cv}
 
     # context-parallel path: sequence-sharded KV, LSE-merged (see
     # _decode_attention_cp); ring-buffer (SWA) caches shard the same way,
@@ -356,4 +405,13 @@ def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
         "k": jnp.zeros((batch, cap, K, D), dtype),
         "v": jnp.zeros((batch, cap, K, D), dtype),
         "kv_pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def init_page_pool(cfg: ArchConfig, n_pages: int, page_size: int, dtype) -> dict:
+    """Global paged KV pool shared by all decode slots (one per attn layer)."""
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_pages, page_size, K, D), dtype),
+        "v": jnp.zeros((n_pages, page_size, K, D), dtype),
     }

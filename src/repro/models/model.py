@@ -42,6 +42,7 @@ class Model:
     decode_step: Callable[..., Tuple[jax.Array, Any]]
     commit_cache: Callable[..., Any]
     init_cache: Callable[..., Any]
+    init_paged_cache: Callable[..., Any]
 
     @property
     def n_blocks(self) -> int:
@@ -161,6 +162,23 @@ def build_model(cfg: ArchConfig) -> Model:
             cache["mem_len"] = jnp.zeros((batch,), jnp.int32)
         return cache
 
+    def init_paged_cache(batch: int, n_pages: int, page_size: int,
+                         max_context: int):
+        """Paged decode cache: global per-layer page pools + per-row block
+        tables ("bt", -1 = unallocated) sized for ``max_context`` tokens.
+        Decode/commit/chunk_prefill all accept it transparently — the "bt"
+        entry rides inside the one donated cache dict."""
+        one = tfm.init_block_page_pool(cfg, n_pages, page_size, dtype)
+        blocks = jax.tree.map(
+            lambda x: jnp.tile(x[None], (n_blocks,) + (1,) * x.ndim), one
+        )
+        p_max = -(-max_context // page_size)
+        return {
+            "blocks": blocks,
+            "len": jnp.zeros((batch,), jnp.int32),
+            "bt": jnp.full((batch, p_max), -1, jnp.int32),
+        }
+
     # ---------------------------------------------------------------- prefill
     def prefill(params, batch, max_len: int):
         """Run the prompt; returns (last-token logits (B, V), cache).
@@ -240,7 +258,7 @@ def build_model(cfg: ArchConfig) -> Model:
         x = constraint(x, ("batch", None, "embed"))
         x, new_blocks = tfm.scan_decode(
             params["blocks"], cfg, x, cache["blocks"], cache["len"],
-            mem_len=cache.get("mem_len"),
+            mem_len=cache.get("mem_len"), block_tables=cache.get("bt"),
         )
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(params["embedding"], x, cfg.tie_embeddings, cfg.vocab_size)
@@ -270,4 +288,5 @@ def build_model(cfg: ArchConfig) -> Model:
         decode_step=decode_step,
         commit_cache=commit_cache,
         init_cache=init_cache,
+        init_paged_cache=init_paged_cache,
     )

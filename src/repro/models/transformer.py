@@ -80,6 +80,18 @@ def init_block_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Dict[s
     return cache
 
 
+def init_block_page_pool(cfg: ArchConfig, n_pages: int, page_size: int, dtype) -> Dict[str, Any]:
+    """Per-layer global page pools (paged decode; attention-only stacks —
+    SSM state is not positional, so it cannot live in pages)."""
+    pattern = _block_pattern(cfg)
+    assert all(kind == "attn" for kind, _ in pattern), \
+        "paged KV requires an attention-only stack"
+    return {
+        str(i): attn.init_page_pool(cfg, n_pages, page_size, dtype)
+        for i in range(len(pattern))
+    }
+
+
 # ---------------------------------------------------------------------------
 # Block apply (three modes share one layer walker)
 # ---------------------------------------------------------------------------
@@ -200,11 +212,13 @@ def block_decode(
     cache_len: jax.Array,
     *,
     mem_len: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict, Dict[str, Any]]:
     """Decode T tokens through one block, updating its cache.
 
     Cross memories (enc-dec) live in the cache ("cross_k"/"cross_v"),
-    precomputed at prefill; ``mem_len`` gives their valid length.
+    precomputed at prefill; ``mem_len`` gives their valid length.  With
+    ``block_tables`` the attn caches are global page pools ({"k", "v"} only).
     """
     new_cache: Dict[str, Any] = {}
     for i in range(cfg.scan_block):
@@ -212,8 +226,10 @@ def block_decode(
         h = rms_norm(x, layer["norm1"], cfg.norm_eps)
         c = cache[str(i)]
         if "attn" in layer:
+            keys = ("k", "v") if block_tables is not None else ("k", "v", "kv_pos")
             out, nc = attn.attention_decode(
-                layer["attn"], cfg, h, {k: c[k] for k in ("k", "v", "kv_pos")}, cache_len
+                layer["attn"], cfg, h, {k: c[k] for k in keys}, cache_len,
+                block_tables=block_tables,
             )
             x = x + out
         else:
@@ -291,11 +307,13 @@ def scan_prefill(stacked, cfg: ArchConfig, x, positions, cache, *, cross_mem=Non
     return x, aux, new_cache
 
 
-def scan_decode(stacked, cfg: ArchConfig, x, cache, cache_len, *, mem_len=None):
+def scan_decode(stacked, cfg: ArchConfig, x, cache, cache_len, *, mem_len=None,
+                block_tables=None):
     def body(carry, inp):
         x, aux = carry
         bp, bc = inp
-        x, aux, nc = block_decode(bp, cfg, x, aux, bc, cache_len, mem_len=mem_len)
+        x, aux, nc = block_decode(bp, cfg, x, aux, bc, cache_len, mem_len=mem_len,
+                                  block_tables=block_tables)
         return (x, aux), nc
 
     (x, aux), new_cache = jax.lax.scan(body, (x, dict(AUX0)), (stacked, cache))

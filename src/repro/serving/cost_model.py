@@ -260,3 +260,40 @@ class PrefillDelayEstimator:
             t = max(t / self.tick_s, 1.0)
         req._prefill_ticks = t
         return t
+
+    def saved_ticks(self, prompt_len: int, hit_tokens: int) -> float:
+        """Prefill ticks a resident radix prefix of ``hit_tokens`` saves for
+        a ``prompt_len`` prompt — the absolute prefill work a prefix-hit
+        route avoids, in the same tick units as :meth:`ticks`."""
+        hit = min(max(hit_tokens, 0), prompt_len)
+        if hit == 0:
+            return 0.0
+        if self.prefill_chunk:
+            full = max(-(-prompt_len // self.prefill_chunk), 1)
+            rem = max(-(-(prompt_len - hit) // self.prefill_chunk), 1)
+            return float(full - rem)
+        full = self.cost.prefill_time(prompt_len)
+        rem = self.cost.prefill_time(prompt_len, cached_tokens=hit)
+        return max(full - rem, 0.0) / self.tick_s
+
+    def saved_frac(self, prompt_len: int, hit_tokens: int) -> float:
+        """Saved prefill work as a fraction of the full prompt's prefill
+        cost, clamped to [0, 1] — the normalised prefix-hit score FlowGuard's
+        ``prefix_weight`` term consumes.
+
+        When prefill is memory-bound the roofline wall-time delta degenerates
+        to ~0 (the weight stream floors both sides), but the hit still skips
+        the prefix's flops and KV writes — fall back to the token fraction so
+        the routing signal survives the memory-bound regime.
+        """
+        hit = min(max(hit_tokens, 0), prompt_len)
+        if prompt_len <= 0 or hit == 0:
+            return 0.0
+        if self.prefill_chunk:
+            full = float(max(-(-prompt_len // self.prefill_chunk), 1))
+        else:
+            full = self.cost.prefill_time(prompt_len) / self.tick_s
+        frac = self.saved_ticks(prompt_len, hit) / full if full > 0.0 else 0.0
+        if frac <= 0.0:
+            frac = hit / prompt_len
+        return min(max(frac, 0.0), 1.0)

@@ -2,19 +2,47 @@
 the prefix cache that feeds FlowGuard's cache-hit-rate signal C_w.
 
 The pool tracks logical blocks (``block_size`` tokens each) with reference
-counts, enabling copy-on-write prefix sharing across requests.  The real JAX
-engine maps blocks onto per-slot dense cache rows (the TPU-friendly layout;
-the Pallas decode kernel also accepts a block table for the fully paged
-layout — see kernels/decode_attention.py); the simulator uses the pool purely
-for memory accounting.  Either way, *this* module is the single source of
-truth for M_w (memory utilisation) and C_w (prefix reuse).
+counts, enabling copy-on-write prefix sharing across requests.  In serve mode
+(``KVCacheManager(serve_prefixes=True)``) block ids double as device page
+indices into the engine's global page pool (kernels/decode_attention.py), a
+radix index over the deterministic ``chain_hashes`` answers longest-resident-
+prefix probes for prefix-hit-aware routing, and freed pages stay resurrectable
+until recycled (SGLang RadixCache-style retention).  The simulator and the
+dense engine path use the pool purely for memory accounting.  Either way,
+*this* module is the single source of truth for M_w (memory utilisation) and
+C_w (prefix reuse).
 """
 from __future__ import annotations
 
 import dataclasses
 import zlib
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
+
+
+def _hash_block(parent_hash: int, block: Sequence[int]) -> int:
+    """One chain-hash link: crc32 of the little-endian (parent, *block) ints."""
+    data = b"".join(
+        int(t).to_bytes(8, "little", signed=True) for t in (parent_hash, *block)
+    )
+    return zlib.crc32(data)
+
+
+def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Content-hash chain of full blocks of ``tokens`` (prefix identity).
+
+    crc32 over the little-endian bytes of (parent_hash, *block) — NOT the
+    builtin ``hash()``, which PYTHONHASHSEED randomises per process and
+    which therefore made prefix-block sharing (and the C_w hit-rate signal
+    FlowGuard routes on) nondeterministic across processes.  32-bit
+    collisions are acceptable for a cache-reuse signal.
+    """
+    out: List[int] = []
+    parent = 0
+    for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
+        parent = _hash_block(parent, tokens[i : i + block_size])
+        out.append(parent)
+    return out
 
 
 @dataclasses.dataclass
@@ -25,39 +53,134 @@ class Block:
     content_hash: Optional[int] = None
 
 
+@dataclasses.dataclass
+class RadixNode:
+    """One registered prefix block in the radix tree (keyed by chain hash).
+
+    The chain hash already encodes the whole prefix, so the tree is flat on
+    hashes with explicit parent links; children are tracked for unlink
+    bookkeeping only (never iterated — deterministic either way).
+    """
+    chain_hash: int
+    parent_hash: int
+    block_id: int
+    children: Set[int] = dataclasses.field(default_factory=set)
+
+
+class RadixIndex:
+    """Radix tree over chain-hashed prefix blocks (SGLang RadixCache-style).
+
+    ``match`` walks a token stream block-by-block, hashing incrementally and
+    stopping at the first non-resident link — O(matched prefix), no
+    allocation, so the router can probe every worker per submission.
+    """
+
+    def __init__(self) -> None:
+        self.nodes: Dict[int, RadixNode] = {}
+
+    def insert(self, chain_hash: int, parent_hash: int, block_id: int) -> None:
+        self.nodes[chain_hash] = RadixNode(chain_hash, parent_hash, block_id)
+        parent = self.nodes.get(parent_hash)
+        if parent is not None:
+            parent.children.add(chain_hash)
+
+    def remove(self, chain_hash: int) -> None:
+        node = self.nodes.pop(chain_hash, None)
+        if node is None:
+            return
+        parent = self.nodes.get(node.parent_hash)
+        if parent is not None:
+            parent.children.discard(chain_hash)
+
+    def match(self, tokens: Sequence[int], block_size: int,
+              max_blocks: Optional[int] = None) -> List[int]:
+        """Block ids of the longest resident prefix of ``tokens``."""
+        limit = len(tokens) // block_size
+        if max_blocks is not None:
+            limit = min(limit, max_blocks)
+        parent = 0
+        matched: List[int] = []
+        for i in range(limit):
+            h = _hash_block(parent, tokens[i * block_size : (i + 1) * block_size])
+            node = self.nodes.get(h)
+            if node is None or node.parent_hash != parent:
+                break
+            matched.append(node.block_id)
+            parent = h
+        return matched
+
+
 class BlockPool:
     """Fixed-capacity block allocator with refcounts and a FIFO free list.
 
-    Freed blocks are recycled oldest-freed-first.  ``release()`` drops the
-    content hash, so freed contents are never resurrectable either way —
-    FIFO is about deterministic, fair recycling order (and matching what
-    this docstring used to call "LRU-free eviction" while ``list.pop()``
-    actually delivered LIFO).
+    Freed blocks are recycled oldest-freed-first.  With ``cache_freed=False``
+    (the default) ``release()`` drops the content hash, so freed contents are
+    never resurrectable — FIFO is about deterministic, fair recycling order.
+    With ``cache_freed=True`` (the paged serve path) a freed block keeps its
+    hash registered until the free list actually recycles it: the device page
+    still holds valid KV until then, so a later request with the same prefix
+    resurrects it at zero prefill cost, and eviction of the cached tail is
+    lazy, FIFO, and deterministic.
     """
 
-    def __init__(self, n_blocks: int, block_size: int = 16):
+    def __init__(self, n_blocks: int, block_size: int = 16,
+                 cache_freed: bool = False):
         self.n_blocks = n_blocks
         self.block_size = block_size
+        self.cache_freed = cache_freed
         self.blocks = [Block(i) for i in range(n_blocks)]
         self.free: Deque[int] = deque(range(n_blocks))
         self.hash_index: Dict[int, int] = {}  # content_hash -> block_id
+        self.radix = RadixIndex()
+
+    # ------------------------------------------------------------- registry
+    def lookup(self, content_hash: int) -> Optional[int]:
+        return self.hash_index.get(content_hash)
+
+    def register(self, block_id: int, content_hash: int,
+                 parent_hash: int = 0) -> None:
+        """Attach a content hash to an already-held block (e.g. a generated
+        block whose pages just became fully committed)."""
+        b = self.blocks[block_id]
+        assert b.content_hash is None and content_hash not in self.hash_index
+        b.content_hash = content_hash
+        self.hash_index[content_hash] = block_id
+        self.radix.insert(content_hash, parent_hash, block_id)
+
+    def _unregister(self, b: Block) -> None:
+        if b.content_hash is not None:
+            self.hash_index.pop(b.content_hash, None)
+            self.radix.remove(b.content_hash)
+            b.content_hash = None
 
     # ------------------------------------------------------------- alloc
-    def allocate(self, content_hash: Optional[int] = None) -> Optional[int]:
+    def allocate(self, content_hash: Optional[int] = None,
+                 parent_hash: int = 0) -> Optional[int]:
         """Allocate one block (optionally registering a content hash).
-        Returns None when the pool is exhausted."""
+        A registered hash is consumed (refcount++), resurrecting a cached
+        freed block if needed.  Returns None when the pool is exhausted."""
         if content_hash is not None and content_hash in self.hash_index:
             bid = self.hash_index[content_hash]
-            self.blocks[bid].ref_count += 1
+            b = self.blocks[bid]
+            if b.ref_count == 0:  # cached freed block: revive off the free list
+                self.free.remove(bid)
+            b.ref_count += 1
             return bid
+        return self.allocate_fresh(content_hash, parent_hash)
+
+    def allocate_fresh(self, content_hash: Optional[int] = None,
+                       parent_hash: int = 0) -> Optional[int]:
+        """Allocate a never-shared block off the free list (no hash consume)."""
         if not self.free:
             return None
         bid = self.free.popleft()  # FIFO: reuse the oldest-freed block
         b = self.blocks[bid]
+        self._unregister(b)  # lazy eviction of a cached freed prefix
         b.ref_count = 1
-        b.content_hash = content_hash
-        if content_hash is not None:
+        if content_hash is not None and content_hash not in self.hash_index:
+            b.content_hash = content_hash
             self.hash_index[content_hash] = bid
+            self.radix.insert(content_hash, parent_hash, bid)
         return bid
 
     def release(self, block_id: int) -> None:
@@ -65,9 +188,8 @@ class BlockPool:
         assert b.ref_count > 0, f"double free of block {block_id}"
         b.ref_count -= 1
         if b.ref_count == 0:
-            if b.content_hash is not None:
-                self.hash_index.pop(b.content_hash, None)
-                b.content_hash = None
+            if not self.cache_freed:
+                self._unregister(b)
             self.free.append(block_id)
 
     # ------------------------------------------------------------- queries
@@ -83,40 +205,39 @@ class BlockPool:
         return -(-n_tokens // self.block_size)
 
 
-def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
-    """Content-hash chain of full blocks of ``tokens`` (prefix identity).
-
-    crc32 over the little-endian bytes of (parent_hash, *block) — NOT the
-    builtin ``hash()``, which PYTHONHASHSEED randomises per process and
-    which therefore made prefix-block sharing (and the C_w hit-rate signal
-    FlowGuard routes on) nondeterministic across processes.  32-bit
-    collisions are acceptable for a cache-reuse signal.
-    """
-    out: List[int] = []
-    parent = 0
-    for i in range(0, len(tokens) - len(tokens) % block_size, block_size):
-        data = b"".join(
-            int(t).to_bytes(8, "little", signed=True)
-            for t in (parent, *tokens[i : i + block_size])
-        )
-        parent = zlib.crc32(data)
-        out.append(parent)
-    return out
-
-
 @dataclasses.dataclass
 class SequenceAllocation:
     request_id: str
     block_ids: List[int]
     n_tokens: int
     shared_blocks: int  # prefix blocks reused from the pool
+    # incremental chain-hash state: ``last_hash`` is the hash of block
+    # ``n_hashed / block_size - 1``; ``tail`` buffers committed tokens past
+    # the last hashed block, so extending is O(block), never O(prefix).
+    last_hash: int = 0
+    n_hashed: int = 0
+    tail: List[int] = dataclasses.field(default_factory=list)
+    private: bool = False  # opted out of sharing/registration (chunked ingest)
 
 
 class KVCacheManager:
-    """Per-worker KV accounting: allocation with prefix reuse + hit-rate EMA."""
+    """Per-worker KV accounting: allocation with prefix reuse + hit-rate EMA.
 
-    def __init__(self, n_blocks: int, block_size: int = 16, hit_ema: float = 0.7):
-        self.pool = BlockPool(n_blocks, block_size)
+    ``serve_prefixes=True`` is the paged-engine mode: block ids are device
+    page indices, so shared-prefix consumption is restricted to the *leading*
+    resident run (those are the only pages the new request may skip writing),
+    capped so at least one prompt token is always recomputed (the admission
+    step needs a last-token logit), and freed pages stay resurrectable until
+    recycled.  ``max_seq_blocks`` bounds one sequence's block table (the
+    device-side ``P_max`` page budget).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int = 16, hit_ema: float = 0.7,
+                 serve_prefixes: bool = False,
+                 max_seq_blocks: Optional[int] = None):
+        self.pool = BlockPool(n_blocks, block_size, cache_freed=serve_prefixes)
+        self.serve_prefixes = serve_prefixes
+        self.max_seq_blocks = max_seq_blocks
         self.seqs: Dict[str, SequenceAllocation] = {}
         # Optimistic prior + fast EMA: a cold/idle worker must not look
         # cache-poor forever, or hit-rate-weighted routing (FlowGuard Eq 1,
@@ -126,31 +247,61 @@ class KVCacheManager:
         self.hit_rate = 0.5
         self._hit_ema = hit_ema
 
-    def allocate_sequence(self, request_id: str, tokens: Sequence[int], extra_tokens: int = 0) -> Optional[SequenceAllocation]:
+    def allocate_sequence(self, request_id: str, tokens: Sequence[int],
+                          extra_tokens: int = 0,
+                          share: bool = True) -> Optional[SequenceAllocation]:
         """Allocate blocks for a prompt (+ planned generation).  Full prompt
         blocks participate in prefix sharing.  Returns None on OOM (caller
         should queue / evict)."""
         bs = self.pool.block_size
         hashes = chain_hashes(tokens, bs)
         total_blocks = self.pool.blocks_for_tokens(len(tokens) + extra_tokens)
+        if self.max_seq_blocks is not None and total_blocks > self.max_seq_blocks:
+            return None
+        # serve mode: only the leading resident run is consumable (its pages
+        # are skipped, never written), and at least one prompt token must be
+        # left to recompute so admission has a last-token logit to sample
+        max_shared = len(hashes)
+        if self.serve_prefixes:
+            max_shared = min(max_shared, max(0, (len(tokens) - 1) // bs))
         got: List[int] = []
         shared = 0
+        leading = True
         ok = True
         for i in range(total_blocks):
             h = hashes[i] if i < len(hashes) else None
-            before = self.pool.hash_index.get(h) if h is not None else None
-            bid = self.pool.allocate(h)
+            parent = hashes[i - 1] if 0 < i <= len(hashes) else 0
+            if not self.serve_prefixes:
+                before = self.pool.lookup(h) if h is not None else None
+                bid = self.pool.allocate(h, parent)
+                if before is not None and before == bid:
+                    shared += 1
+            elif (share and leading and h is not None and shared < max_shared
+                  and self.pool.lookup(h) is not None):
+                bid = self.pool.allocate(h, parent)
+                shared += 1
+            else:
+                # private page — this request writes it; register the hash so
+                # later requests can share, unless it is already claimed
+                leading = False
+                reg = h if (share and h is not None
+                            and self.pool.lookup(h) is None) else None
+                bid = self.pool.allocate_fresh(reg, parent)
             if bid is None:
                 ok = False
                 break
-            if before is not None and before == bid:
-                shared += 1
             got.append(bid)
         if not ok:
             for bid in got:
                 self.pool.release(bid)
             return None
-        alloc = SequenceAllocation(request_id, got, len(tokens), shared)
+        alloc = SequenceAllocation(
+            request_id, got, len(tokens), shared,
+            last_hash=hashes[-1] if hashes else 0,
+            n_hashed=len(hashes) * bs,
+            tail=[int(t) for t in tokens[len(hashes) * bs :]],
+            private=not share,
+        )
         self.seqs[request_id] = alloc
         # prompts shorter than one block can never share a prefix block —
         # scoring them hit=0 would drag the EMA down on workloads that have
@@ -170,18 +321,25 @@ class KVCacheManager:
         self.seqs[request_id].n_tokens -= granted  # roll back the partial grant
         return False
 
-    def extend_up_to(self, request_id: str, n_new_tokens: int) -> int:
+    def extend_up_to(self, request_id: str, n_new_tokens: int,
+                     tokens: Optional[Sequence[int]] = None) -> int:
         """Grow a sequence's allocation by UP TO ``n_new_tokens`` tokens.
 
         Returns how many tokens were actually granted — short on block-pool
-        exhaustion, in which case the caller must truncate the sequence (the
-        engine finishes it with ``kv_evicted``) instead of over-committing
-        accounting against blocks that were never allocated.
+        exhaustion (or the per-sequence page-table ceiling), in which case
+        the caller must truncate, evict-and-requeue, or otherwise stop the
+        sequence instead of over-committing accounting against blocks that
+        were never allocated.  ``tokens``, when given, are the committed
+        token values the grant covers — they feed the incremental chain hash
+        so freshly completed generated blocks join the prefix cache.
         """
         alloc = self.seqs[request_id]
         bs = self.pool.block_size
         capacity = len(alloc.block_ids) * bs - alloc.n_tokens
         while capacity < n_new_tokens:
+            if (self.max_seq_blocks is not None
+                    and len(alloc.block_ids) >= self.max_seq_blocks):
+                break
             bid = self.pool.allocate()
             if bid is None:
                 break
@@ -189,7 +347,55 @@ class KVCacheManager:
             capacity += bs
         granted = min(max(capacity, 0), n_new_tokens)
         alloc.n_tokens += granted
+        if granted and tokens is not None and self.serve_prefixes and not alloc.private:
+            alloc.tail.extend(int(t) for t in tokens[:granted])
+            self._absorb_tail(alloc)
         return granted
+
+    def _absorb_tail(self, alloc: SequenceAllocation) -> None:
+        """Chain-hash newly completed blocks — O(block) each, incremental."""
+        bs = self.pool.block_size
+        while len(alloc.tail) >= bs:
+            block, alloc.tail = alloc.tail[:bs], alloc.tail[bs:]
+            h = _hash_block(alloc.last_hash, block)
+            idx = alloc.n_hashed // bs
+            if idx < len(alloc.block_ids):
+                bid = alloc.block_ids[idx]
+                if (self.pool.blocks[bid].content_hash is None
+                        and self.pool.lookup(h) is None):
+                    self.pool.register(bid, h, alloc.last_hash)
+            alloc.last_hash = h
+            alloc.n_hashed += bs
+
+    def ensure_margin(self, request_id: str,
+                      margin_tokens: int) -> Tuple[str, int]:
+        """Pre-grow block headroom so the next ``margin_tokens`` device writes
+        all have pages (speculative writes beyond a row's table are silently
+        dropped, which would lose accepted KV).  Returns ``(status, added)``
+        with status ``"ok"``, ``"ceiling"`` (per-sequence page budget hit) or
+        ``"oom"`` (pool dry — the caller picks an eviction victim)."""
+        alloc = self.seqs[request_id]
+        need = self.pool.blocks_for_tokens(alloc.n_tokens + margin_tokens)
+        added = 0
+        while len(alloc.block_ids) < need:
+            if (self.max_seq_blocks is not None
+                    and len(alloc.block_ids) >= self.max_seq_blocks):
+                return "ceiling", added
+            bid = self.pool.allocate()
+            if bid is None:
+                return "oom", added
+            alloc.block_ids.append(bid)
+            added += 1
+        return "ok", added
+
+    def match_prefix(self, tokens: Sequence[int]) -> int:
+        """Tokens of the longest resident (consumable) prefix — the routing
+        probe.  Pure read: no allocation, no refcount changes."""
+        if not self.serve_prefixes:
+            return 0
+        bs = self.pool.block_size
+        cap = max((len(tokens) - 1) // bs, 0)
+        return len(self.pool.radix.match(tokens, bs, max_blocks=cap)) * bs
 
     def free_sequence(self, request_id: str) -> None:
         alloc = self.seqs.pop(request_id, None)

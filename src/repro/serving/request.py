@@ -54,6 +54,9 @@ class Request:
     error: Optional[str] = None
     # provenance for prefix caching
     cache_hit_tokens: int = 0
+    # times this request was evicted from a full paged pool mid-decode and
+    # re-queued from scratch (continuous batching under memory pressure)
+    kv_requeued: int = 0
     # per-verify-step speculation depths this request ran at (observability
     # for the per-row depth controller; averaged onto its RequestRecord)
     spec_depths: List[int] = dataclasses.field(default_factory=list)

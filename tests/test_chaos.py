@@ -85,6 +85,42 @@ def test_last_worker_loss_fails_everything_with_records(engine_factory,
     assert eng.drained()
 
 
+def test_paged_worker_death_conserves_page_refcounts(engine_factory,
+                                                     trace_factory):
+    """Kill a paged pair mid-decode: every page the dead pair held is
+    released (refcounts conserved — used == 0, no live sequences), the
+    survivor absorbs the restarted work, and record conservation holds."""
+    eng = engine_factory(n_pairs=2, paged_kv=True, kv_blocks=256,
+                         kv_block_size=16)
+    reqs = trace_factory("bursty", n=6, seed=25, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    victim = None
+    for _ in range(40):
+        eng.step()
+        for p in eng.pairs:
+            if p.active_slots() and any(
+                req is not None and req.output_tokens for req in p.slot_req
+            ):
+                victim = p.worker_id
+                break
+        if victim is not None:
+            break
+    assert victim is not None, "no pair reached mid-decode"
+    dead = eng.pairs[victim]
+    assert dead.kv.pool.used > 0  # pages genuinely in flight at the kill
+    eng.fail_worker(victim)
+    assert dead.kv.pool.used == 0, "dead pair leaked page refcounts"
+    assert not dead.kv.seqs
+    assert all(b.ref_count == 0 for b in dead.kv.pool.blocks)
+    eng.run_until_done(max_steps=1500)
+    _assert_no_dropped_records(eng, reqs)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    # the survivor's pool drains clean too once everything finishes
+    survivor = eng.pairs[1 - victim]
+    assert survivor.kv.pool.used == 0 and not survivor.kv.seqs
+
+
 def test_chaos_replay_is_deterministic(engine_factory, trace_factory):
     """Same seed, same kill tick => identical terminal outcome.  Divergence
     here is exactly what FL4 exists to prevent (hash()/set-order/global-RNG
