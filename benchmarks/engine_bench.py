@@ -28,6 +28,12 @@ on vs off.  The ``chunked`` block records the compiled prefill trace count
 requests' tick-time TTFT p99 under both scheduling modes — preemption must
 let the shorts jump the long prompt's chunks.
 
+StreamTrace observability: the mixed trace is replayed on two fresh engines
+(``trace="on"`` vs ``trace="off"``, best-of-N each); the ``obs`` block
+records the tokens/s overhead fraction (contract: < 5%), retrace count
+(contract: 0), Chrome-trace span counts per worker lane
+(BENCH_obs_trace.json artifact) and Prometheus histogram presence.
+
   PYTHONPATH=src python benchmarks/engine_bench.py               # standard
   PYTHONPATH=src python benchmarks/engine_bench.py --reduced     # CI smoke
   PYTHONPATH=src python benchmarks/engine_bench.py --fail-on-retrace
@@ -41,6 +47,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import sys
 import time
 from pathlib import Path
@@ -56,7 +63,8 @@ def _percentile(vals: List[float], p: float) -> float:
     if not vals:
         return 0.0
     vals = sorted(vals)
-    return vals[min(int(p / 100.0 * len(vals)), len(vals) - 1)]
+    # nearest-rank: ceil(p/100 * n) - 1, matching PerformanceMonitor.summary()
+    return vals[max(math.ceil(p / 100.0 * len(vals)) - 1, 0)]
 
 
 def _clip_prompts(reqs, max_prompt: int):
@@ -373,7 +381,69 @@ def main(argv=None) -> int:
         print(f"  legacy     {legacy['tokens_per_s']:8.1f} tok/s  "
               f"retraces {legacy['retraces_steady']}")
 
+    # ---- StreamTrace observability overhead (trace=on vs trace=off) --------
+    # the mixed trace A/B on two fresh warmed engines; best-of-N wall-clock
+    # per side denoises CI jitter.  The contract: tracing costs < 5% tokens/s
+    # and adds zero steady-state retraces (payloads are host values the
+    # engine already fetched).
+    print("engine_bench: StreamTrace overhead (trace=on vs trace=off)")
+    obs_repeats = 5
+    obs_engines = {}
+    obs_best: Dict[str, float] = {"off": 0.0, "on": 0.0}
+    obs_retraces = 0
+    for mode in ("off", "on"):
+        oeng = PipeServeEngine(
+            cfg, params, n_pairs=1,
+            econf=EngineConfig(trace=mode, **base),
+        )
+        oeng.warmup(max_prompt_len=max_prompt)
+        obs_engines[mode] = oeng
+
+    def obs_trace():
+        # 3x the mixed trace: the reduced run is otherwise so short
+        # (~150 ms) that scheduler jitter swamps the tracing cost
+        sims = sample_mixed(n_mixed * 3, vocab_size=cfg.vocab_size)
+        for s in sims:
+            s.request.params.max_new_tokens = max_new
+        return _clip_prompts(sims, max_prompt)
+
+    # interleave the sides so machine-level drift (turbo, page cache, GC)
+    # hits both equally; best-of-N per side then denoises the remainder
+    for _ in range(obs_repeats):
+        for mode in ("off", "on"):
+            r = serve_trace(obs_engines[mode], obs_trace())
+            obs_best[mode] = max(obs_best[mode], r["tokens_per_s"])
+            obs_retraces += r["retraces_steady"]
+    overhead = max(0.0, 1.0 - obs_best["on"] / max(obs_best["off"], 1e-9))
+    oeng = obs_engines["on"]
+    obs_trace_path = str(Path(args.out).parent / "BENCH_obs_trace.json")
+    doc = oeng.export_chrome_trace(obs_trace_path)
+    span_counts: Dict[str, int] = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X":
+            lane = ("prefill", "decode", "verify")[ev["tid"]]
+            key = f"pair{ev['pid']}.{lane}"
+            span_counts[key] = span_counts.get(key, 0) + 1
+    prom = oeng.prometheus_text()
+    obs = {
+        "trace": "mixed",
+        "repeats": obs_repeats,
+        "tokens_per_s_off": obs_best["off"],
+        "tokens_per_s_on": obs_best["on"],
+        "overhead_frac": round(overhead, 4),
+        "retraces_steady": obs_retraces,
+        "events_retained": len(oeng.trace_events()),
+        "chrome_trace": obs_trace_path,
+        "chrome_spans": span_counts,
+        "prom_has_ttft_histogram": "streamserve_ttft_ticks_bucket" in prom,
+        "prom_has_tpot_histogram": "streamserve_tpot_ticks_bucket" in prom,
+    }
+    print(f"  off {obs_best['off']:.1f} tok/s  on {obs_best['on']:.1f} tok/s  "
+          f"overhead {overhead:.1%}  retraces {obs_retraces}  "
+          f"spans {sum(span_counts.values())}")
+
     retraces = max(r["retraces_steady"] for r in results.values())
+    retraces = max(retraces, obs_retraces)
     out = {
         "bench": "engine",
         "mode": "reduced" if args.reduced else "standard",
@@ -392,6 +462,7 @@ def main(argv=None) -> int:
         },
         "chunked": chunked,
         "paged": paged,
+        "obs": obs,
         "legacy_mixed": legacy,
         "speedup_mixed": (
             round(results["mixed"]["tokens_per_s"] / legacy["tokens_per_s"], 2)

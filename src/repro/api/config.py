@@ -74,6 +74,12 @@ class ServeConfig:
                                      # shared depth when they are disabled)
     slo_routing: bool = True         # TTFT-slack routing + EDF prefill order
                                      # + shed-infeasible admission guard
+    # ---- StreamTrace observability ----------------------------------------
+    trace: str = "off"               # "off" (zero-cost no-op), "on" (full
+                                     # tracing + exporters), "flight" (ring
+                                     # kept for post-mortem dumps)
+    trace_capacity: int = 4096       # retained events per worker (ring size)
+    trace_dir: Optional[str] = None  # also write flight dumps here as JSON
     # ---- workload defaults ------------------------------------------------
     max_new_tokens: int = 64         # default SamplingParams.max_new_tokens
     seed: int = 0
@@ -149,6 +155,16 @@ class ServeConfig:
                     f"paged_kv requires max_len ({self.max_len}) to be a "
                     f"multiple of kv_block_size ({self.kv_block_size})"
                 )
+        if self.trace not in ("off", "on", "flight"):
+            raise ValueError(
+                f"trace must be 'off', 'on' or 'flight' (got {self.trace!r})"
+            )
+        if not isinstance(self.trace_capacity, int) or self.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity must be an int >= 1 (got {self.trace_capacity!r})"
+            )
+        if self.trace_dir is not None and not isinstance(self.trace_dir, str):
+            raise ValueError(f"trace_dir must be a str or None (got {self.trace_dir!r})")
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0 (got {self.temperature})")
         if self.n_layers is not None and self.n_layers < 1:
@@ -291,6 +307,9 @@ class ServeConfig:
             paged_kv=self.paged_kv,
             max_context=self.max_context,
             kv_evict_policy=self.kv_evict_policy,
+            trace=self.trace,
+            trace_capacity=self.trace_capacity,
+            trace_dir=self.trace_dir,
         )
 
     def to_sim_config(self, **overrides):

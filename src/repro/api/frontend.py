@@ -232,6 +232,26 @@ class StreamServe:
     def fail_worker(self, worker_id: int) -> int:
         return self.engine.fail_worker(worker_id)
 
+    # ---------------------------------------------------------- observability
+    def trace_events(self):
+        """Raw StreamTrace events (empty when ``trace='off'``)."""
+        return self.engine.trace_events()
+
+    def export_chrome_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Chrome-trace/Perfetto JSON of the retained trace events."""
+        return self.engine.export_chrome_trace(path)
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the current engine state (the
+        payload the HTTP gateway's /metrics endpoint will serve)."""
+        return self.engine.prometheus_text()
+
+    @property
+    def flight_dumps(self) -> List[Dict[str, Any]]:
+        """Flight-recorder dumps captured so far (engine exception or
+        ``fail_worker``) — newest last."""
+        return self.engine.flight_dumps
+
     @property
     def monitor(self):
         return self.engine.monitor

@@ -59,6 +59,26 @@ from repro.core.specustream import (
 )
 from repro.models import build_model
 from repro.models.attention import SPEC_MARGIN, cache_capacity
+from repro.obs.spans import request_phases
+from repro.obs.trace import (
+    EV_ADMIT,
+    EV_CANCEL,
+    EV_COUNTERS,
+    EV_DECODE_STEP,
+    EV_FINISH,
+    EV_KV_ALLOC,
+    EV_KV_EVICT,
+    EV_KV_REQUEUE,
+    EV_PREFILL_CHUNK,
+    EV_PREFILL_END,
+    EV_PREFILL_PREEMPT,
+    EV_PREFILL_RESUME,
+    EV_PREFILL_START,
+    EV_VERIFY,
+    EV_WORKER_FAIL,
+    NullRecorder,
+    make_recorder,
+)
 from repro.serving.cost_model import PrefillDelayEstimator
 from repro.serving.draft import DraftContext, EngineDraft
 from repro.serving.kv_cache import KVCacheManager
@@ -151,6 +171,7 @@ def _terminal_record(req: Request, now: float, kv_evicted: bool = False,
     — queued-but-never-prefilled cancels build the same record as finishes.
     """
     depths = req.spec_depths
+    queued, prefill, decode, stall = request_phases(req)
     return RequestRecord(
         request_id=req.request_id,
         t_start=req.arrival_time,
@@ -165,6 +186,10 @@ def _terminal_record(req: Request, now: float, kv_evicted: bool = False,
         slo_tpot=req.slo_tpot,
         cancelled=cancelled,
         mean_depth=sum(depths) / len(depths) if depths else 0.0,
+        phase_queued=queued,
+        phase_prefill=prefill,
+        phase_decode=decode,
+        phase_stall=stall,
     )
 
 
@@ -294,6 +319,13 @@ class EngineConfig:
     # kv_requeued); "truncate" is the pre-paging behaviour — finish the starved
     # sequence early with kv_evicted=True
     kv_evict_policy: str = "requeue"
+    # ---- StreamTrace observability -----------------------------------------
+    # "off" (zero-cost no-op recorder), "on" (full tracing + exporters), or
+    # "flight" (tracing whose primary consumer is the post-mortem dump).  Any
+    # enabled mode dumps the ring on engine exception / fail_worker.
+    trace: str = "off"
+    trace_capacity: int = 4096       # retained events per worker (ring size)
+    trace_dir: Optional[str] = None  # also write flight dumps here as JSON
 
     def resolved_spec_policy(self) -> str:
         if self.spec_policy is not None:
@@ -313,10 +345,12 @@ class StreamPair:
         monitor: PerformanceMonitor,
         draft_cfg: Optional[ArchConfig] = None,
         draft_params=None,
+        trace=None,
     ):
         self.worker_id = worker_id
         self.econf = econf
         self.monitor = monitor
+        self.trace = trace if trace is not None else NullRecorder()
         # length bucketing / chunking need padding (resp. cursor-offset
         # continuation) to be invisible, which holds for causal attention but
         # not for SSM state / enc-dec / frontends
@@ -430,6 +464,8 @@ class StreamPair:
             n_rows = max(econf.admit_batch, 2)  # >= 2: one parked + one active
             self.chunk_rows: List[Optional[Request]] = [None] * n_rows
             self.chunk_cursor: Dict[str, int] = {}
+            # last request granted a chunk — preempt/resume trace detection
+            self._chunk_last: Optional[str] = None
             self.chunk_cache = self.lane.model.init_cache(n_rows, econf.max_len)
             model = self.lane.model
 
@@ -505,7 +541,7 @@ class StreamPair:
         )
 
     # ---------------------------------------------------------------- prefill
-    def reserve_kv(self, req: Request) -> bool:
+    def reserve_kv(self, req: Request, now: float = 0.0) -> bool:
         """Allocate KV blocks for a request ahead of its (batched) prefill.
 
         Dense mode reserves the worst case (prompt + max_new) up front; paged
@@ -528,6 +564,10 @@ class StreamPair:
         if alloc is None:
             return False  # KV pool exhausted — stays queued
         req.cache_hit_tokens = alloc.shared_blocks * self.kv.pool.block_size
+        if self.trace.enabled:
+            self.trace.emit(now, self.worker_id, EV_KV_ALLOC, req.request_id,
+                            (len(alloc.block_ids), alloc.shared_blocks,
+                             req.cache_hit_tokens))
         return True
 
     def prompt_fits(self, req: Request) -> bool:
@@ -567,9 +607,13 @@ class StreamPair:
             return self._admit_paged(reqs, now)
         slots = self.free_slots()[: len(reqs)]
         assert len(slots) == len(reqs), "admit() requires a free slot per request"
+        tr = self.trace
         for req in reqs:
             req.state = RequestState.PREFILLING
             req.t_prefill_start = now
+            if tr.enabled:
+                tr.emit(now, self.worker_id, EV_PREFILL_START, req.request_id,
+                        (req.prompt_len, req.cache_hit_tokens))
         if self._bucketed:
             S = self._bucket(max(len(r.prompt) for r in reqs), self._len_buckets)
             Bb = self._bucket(len(reqs), self._admit_buckets)
@@ -605,6 +649,11 @@ class StreamPair:
             self.slot_req[slots[i]] = req
             self.histories[slots[i]] = [*req.prompt, tok]
             self._spec_reset_slot(slots[i])  # fresh request, fresh EMA
+            if tr.enabled:
+                tr.emit(now, self.worker_id, EV_PREFILL_END, req.request_id,
+                        (len(reqs),))
+                tr.emit(now, self.worker_id, EV_ADMIT, req.request_id,
+                        (slots[i],))
 
     def _admit_paged(self, reqs: List[Request], now: float) -> None:
         """Paged admission: ONE bucketed suffix-prefill straight into pages.
@@ -619,9 +668,13 @@ class StreamPair:
         """
         slots = self.free_slots()[: len(reqs)]
         assert len(slots) == len(reqs), "admit() requires a free slot per request"
+        tr = self.trace
         for req in reqs:
             req.state = RequestState.PREFILLING
             req.t_prefill_start = now
+            if tr.enabled:
+                tr.emit(now, self.worker_id, EV_PREFILL_START, req.request_id,
+                        (req.prompt_len, req.cache_hit_tokens))
         B = self.econf.max_batch
         suffixes = [len(r.prompt) - r.cache_hit_tokens for r in reqs]
         S = self._bucket(max(suffixes), self._len_buckets)
@@ -661,6 +714,11 @@ class StreamPair:
             self.slot_req[slots[i]] = req
             self.histories[slots[i]] = [*req.prompt, tok]
             self._spec_reset_slot(slots[i])
+            if tr.enabled:
+                tr.emit(now, self.worker_id, EV_PREFILL_END, req.request_id,
+                        (len(reqs),))
+                tr.emit(now, self.worker_id, EV_ADMIT, req.request_id,
+                        (slots[i],))
 
     # --------------------------------------------------------- chunked prefill
     def _chunk_pull(self, scheduler, now: float) -> None:
@@ -686,13 +744,16 @@ class StreamPair:
             if not self.prompt_fits(req):
                 scheduler.fail_request(req, now, "exceeds_max_context")
                 continue
-            if not self.reserve_kv(req):
+            if not self.reserve_kv(req, now):
                 scheduler.prefill_queues[wid].appendleft(req)
                 return  # KV pool exhausted — stays queued
             req.state = RequestState.PREFILLING
             req.t_prefill_start = now
             self.chunk_rows[free_rows[0]] = req
             self.chunk_cursor[req.request_id] = 0
+            if self.trace.enabled:
+                self.trace.emit(now, wid, EV_PREFILL_START, req.request_id,
+                                (req.prompt_len, req.cache_hit_tokens))
 
     def _chunk_pick_row(self) -> Optional[int]:
         """Which row gets this tick's chunk: EDF over occupied rows when
@@ -721,6 +782,20 @@ class StreamPair:
         C = self._chunk
         R = len(self.chunk_rows)
         cur = self.chunk_cursor[req.request_id]
+        tr = self.trace
+        if tr.enabled:
+            last = self._chunk_last
+            if last is not None and last != req.request_id \
+                    and last in self.chunk_cursor:
+                # the previous occupant of the lane still has chunks left but
+                # lost this tick's grant: EDF preempted it
+                tr.emit(now, self.worker_id, EV_PREFILL_PREEMPT, last,
+                        (self.chunk_cursor[last], req.request_id))
+            if cur > 0 and last != req.request_id:
+                tr.emit(now, self.worker_id, EV_PREFILL_RESUME,
+                        req.request_id, (cur,))
+        self._chunk_last = req.request_id
+        req.prefill_active_ticks += 1  # a lane turn actually granted
         n = min(C, len(req.prompt) - cur)
         tokens = np.zeros((R, C), np.int32)
         tokens[row, :n] = req.prompt[cur : cur + n]
@@ -737,6 +812,9 @@ class StreamPair:
         )
         cur += n
         self.chunk_cursor[req.request_id] = cur
+        if tr.enabled:
+            tr.emit(now, self.worker_id, EV_PREFILL_CHUNK, req.request_id,
+                    (cur, n))
         if cur >= len(req.prompt):
             self._chunk_complete(row, req, last_logits, now)
 
@@ -779,6 +857,13 @@ class StreamPair:
         self._spec_reset_slot(slot)
         self.chunk_rows[row] = None
         del self.chunk_cursor[req.request_id]
+        if self._chunk_last == req.request_id:
+            self._chunk_last = None
+        if self.trace.enabled:
+            self.trace.emit(now, self.worker_id, EV_PREFILL_END,
+                            req.request_id, (1,))
+            self.trace.emit(now, self.worker_id, EV_ADMIT, req.request_id,
+                            (slot,))
 
     def chunk_release(self, row: int) -> Request:
         """Evict a chunk row without completing it (cancel / worker failure).
@@ -787,6 +872,8 @@ class StreamPair:
         req = self.chunk_rows[row]
         self.chunk_rows[row] = None
         self.chunk_cursor.pop(req.request_id, None)
+        if self._chunk_last == req.request_id:
+            self._chunk_last = None
         self.kv.free_sequence(req.request_id)
         return req
 
@@ -840,6 +927,12 @@ class StreamPair:
             emitted = 0
             for s in active:
                 emitted += self._emit(s, [int(nxt_h[s])], now)
+            if self.trace.enabled:
+                self.trace.emit(
+                    now, self.worker_id, EV_DECODE_STEP, None,
+                    (len(active), 0, 0, emitted, round(self.acceptance, 6),
+                     (), ()),
+                )
             return emitted
 
         # ---- draft proposal (real depth k, padded to a shape bucket) --------
@@ -895,10 +988,19 @@ class StreamPair:
             accepted_frac = float(n_acc[active].mean()) / max(k, 1)
         self.acceptance = 0.8 * self.acceptance + 0.2 * accepted_frac
 
+        if self.trace.enabled:
+            self.trace.emit(now, self.worker_id, EV_VERIFY, None, (k, k_pad))
         emitted = 0
         for s in active:
             toks = [*(int(t) for t in draft_np[s, : int(n_acc[s])]), int(nxt[s])]
             emitted += self._emit(s, toks, now)
+        if self.trace.enabled:
+            self.trace.emit(
+                now, self.worker_id, EV_DECODE_STEP, None,
+                (len(active), k, k_pad, emitted, round(self.acceptance, 6),
+                 tuple(int(rows[s]) for s in active),
+                 tuple(int(n_acc[s]) for s in active)),
+            )
         return emitted
 
     def _emit(self, slot: int, tokens: List[int], now: float) -> int:
@@ -991,13 +1093,21 @@ class StreamPair:
         """Evict a decode slot's pages and resubmit its request (it restarts
         from scratch — decode state is positional, not checkpointable)."""
         req = self.slot_req[slot]
+        if self.trace.enabled:
+            n_freed = len(self.kv.seqs[req.request_id].block_ids)
+            self.trace.emit(now, self.worker_id, EV_KV_EVICT, req.request_id,
+                            (slot, n_freed))
         self.kv.free_sequence(req.request_id)
         self._clear_slot(slot)
         req.output_tokens.clear()
         req.token_times.clear()
         req.spec_depths.clear()
+        req.prefill_active_ticks = 0
         req.kv_requeued += 1
         req.state = RequestState.QUEUED
+        if self.trace.enabled:
+            self.trace.emit(now, self.worker_id, EV_KV_REQUEUE, req.request_id,
+                            (req.kv_requeued,))
         self.requeue(req, now)
 
     def _clear_slot(self, slot: int) -> None:
@@ -1014,8 +1124,14 @@ class StreamPair:
         req.state = RequestState.FINISHED
         req.t_end = now
         self.kv.free_sequence(req.request_id)
-        self.monitor.complete_request(_terminal_record(req, now, kv_evicted=kv_evicted))
+        rec = _terminal_record(req, now, kv_evicted=kv_evicted)
+        self.monitor.complete_request(rec)
         self._clear_slot(slot)
+        if self.trace.enabled:
+            self.trace.emit(now, self.worker_id, EV_FINISH, req.request_id,
+                            (rec.generated, kv_evicted, rec.phase_queued,
+                             rec.phase_prefill, rec.phase_decode,
+                             rec.phase_stall))
 
     # ----------------------------------------------------------------- warmup
     def warmup(self, max_prompt_len: Optional[int] = None) -> int:
@@ -1117,7 +1233,7 @@ class StreamPair:
         return n
 
     # ---------------------------------------------------------------- metrics
-    def publish_metrics(self, queue_depth: int) -> None:
+    def publish_metrics(self, queue_depth: int, now: float = 0.0) -> None:
         self.monitor.update_worker(
             self.worker_id,
             cache_hit_rate=self.kv.hit_rate,
@@ -1126,6 +1242,16 @@ class StreamPair:
             active_load=self.load,
             acceptance_rate=self.acceptance,
         )
+        if self.trace.enabled:
+            depths = [req.spec_depths[-1]
+                      for req in self.slot_req
+                      if req is not None and req.spec_depths]
+            mean_depth = round(sum(depths) / len(depths), 4) if depths else 0.0
+            self.trace.emit(
+                now, self.worker_id, EV_COUNTERS, None,
+                (queue_depth, self.kv.free_blocks, self.kv.pool.used,
+                 round(self.acceptance, 6), round(self.load, 6), mean_depth),
+            )
 
 
 class ModelLaneDraft(EngineDraft):
@@ -1205,8 +1331,11 @@ class PipeServeEngine:
             router = resolve_router(router, config=self.econf.router_config)
         self._now = 0.0
         self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
+        self.trace = make_recorder(self.econf.trace, self.econf.trace_capacity)
+        self.flight_dumps: List[Dict[str, Any]] = []
         self.pairs = [
-            StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg, draft_params)
+            StreamPair(i, cfg, params, self.econf, self.monitor, draft_cfg,
+                       draft_params, trace=self.trace)
             for i in range(n_pairs)
         ]
         # SLO routing prices queued prefill work in engine-tick units via the
@@ -1226,6 +1355,7 @@ class PipeServeEngine:
             n_pairs, router, self.monitor,
             slo_routing=self.econf.slo_routing,
             delay_estimator=estimator.ticks if estimator else None,
+            trace=self.trace,
         )
         self._prefix_estimator = estimator
         if self.econf.paged_kv:
@@ -1278,9 +1408,9 @@ class PipeServeEngine:
         if req is not None:
             req.state = RequestState.CANCELLED
             req.t_end = self._now
-            self.monitor.complete_request(
-                _terminal_record(req, self._now, cancelled=True)
-            )
+            rec = _terminal_record(req, self._now, cancelled=True)
+            self.monitor.complete_request(rec)
+            self._emit_cancel(req, rec)
             return True
         for pair in self.pairs:
             for slot, req in enumerate(pair.slot_req):
@@ -1290,9 +1420,9 @@ class PipeServeEngine:
                 pair._clear_slot(slot)
                 req.state = RequestState.CANCELLED
                 req.t_end = self._now
-                self.monitor.complete_request(
-                    _terminal_record(req, self._now, cancelled=True)
-                )
+                rec = _terminal_record(req, self._now, cancelled=True)
+                self.monitor.complete_request(rec)
+                self._emit_cancel(req, rec)
                 return True
             # mid-chunked-prefill (parked or active chunk row)
             if pair._chunk is None:
@@ -1303,11 +1433,20 @@ class PipeServeEngine:
                 pair.chunk_release(row)
                 req.state = RequestState.CANCELLED
                 req.t_end = self._now
-                self.monitor.complete_request(
-                    _terminal_record(req, self._now, cancelled=True)
-                )
+                rec = _terminal_record(req, self._now, cancelled=True)
+                self.monitor.complete_request(rec)
+                self._emit_cancel(req, rec)
                 return True
         return False
+
+    def _emit_cancel(self, req: Request, rec: RequestRecord) -> None:
+        if self.trace.enabled:
+            self.trace.emit(
+                self._now, req.worker_id if req.worker_id is not None else -1,
+                EV_CANCEL, req.request_id,
+                (rec.generated, rec.phase_queued, rec.phase_prefill,
+                 rec.phase_decode, rec.phase_stall),
+            )
 
     def fail_worker(self, worker_id: int) -> int:
         """Simulate a node failure: drop the pair, re-route queued AND
@@ -1331,13 +1470,28 @@ class PipeServeEngine:
             req.output_tokens.clear()
             req.token_times.clear()
             req.spec_depths.clear()
+            req.prefill_active_ticks = 0
             req.state = RequestState.QUEUED
             # FAILED with a terminal record when this was the last worker
             rerouted += self.scheduler.resubmit_or_fail(req, self._now)
+        if self.trace.enabled:
+            self.trace.emit(self._now, worker_id, EV_WORKER_FAIL, None,
+                            (rerouted,))
+            self._flight_dump("fail_worker")
         return rerouted
 
     def step(self) -> int:
-        """One engine tick: admit + decode on every healthy pair."""
+        """One engine tick: admit + decode on every healthy pair.  Any
+        exception escaping the tick triggers a flight-recorder dump before
+        propagating — the post-mortem always holds the last events."""
+        try:
+            return self._step()
+        except Exception:
+            if self.trace.enabled:
+                self._flight_dump("engine_exception")
+            raise
+
+    def _step(self) -> int:
         self._now += 1.0  # logical time; real wall time is irrelevant on CPU
         emitted = 0
         for pair in self.pairs:
@@ -1366,7 +1520,7 @@ class PipeServeEngine:
                                 req, self._now, "exceeds_max_context"
                             )
                             continue
-                        if not pair.reserve_kv(req):
+                        if not pair.reserve_kv(req, self._now):
                             self.scheduler.prefill_queues[wid].appendleft(req)
                             blocked = True
                             break
@@ -1378,8 +1532,47 @@ class PipeServeEngine:
             n = pair.decode_iteration(self._now)
             emitted += n
             self.monitor.record_tokens(wid, n, self._now)
-            pair.publish_metrics(self.scheduler.queue_depth(wid))
+            pair.publish_metrics(self.scheduler.queue_depth(wid), self._now)
         return emitted
+
+    # ------------------------------------------------------------ StreamTrace
+    def _flight_dump(self, reason: str) -> Dict[str, Any]:
+        """Snapshot the trace ring (flight-recorder dump): kept in memory on
+        ``flight_dumps`` and, when ``trace_dir`` is set, written as JSON named
+        by reason and engine tick (tick time, not wall time — deterministic)."""
+        dump = self.trace.to_dump(reason, self._now)
+        self.flight_dumps.append(dump)
+        if self.econf.trace_dir:
+            import json
+            import os
+
+            os.makedirs(self.econf.trace_dir, exist_ok=True)
+            path = os.path.join(
+                self.econf.trace_dir,
+                f"flight_{reason}_tick{int(self._now)}.json",
+            )
+            with open(path, "w") as f:
+                json.dump(dump, f)
+        return dump
+
+    def trace_events(self) -> List[Tuple]:
+        """All retained trace events, merged across workers in emission order."""
+        return self.trace.events()
+
+    def export_chrome_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Chrome-trace/Perfetto JSON of the retained events (written to
+        ``path`` when given)."""
+        from repro.obs.export import chrome_trace, save_chrome_trace
+
+        if path is not None:
+            return save_chrome_trace(self.trace.events(), path)
+        return chrome_trace(self.trace.events())
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition (v0.0.4) of the engine's current state."""
+        from repro.obs.export import engine_registry
+
+        return engine_registry(self).render()
 
     def drained(self) -> bool:
         """True when nothing is queued, mid-chunked-prefill, or decoding."""

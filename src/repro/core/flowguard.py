@@ -53,21 +53,33 @@ class FlowGuardConfig:
 
 
 class FlowGuard:
-    """Stateless scorer + overload detector over a metrics snapshot."""
+    """Scorer + overload detector over a metrics snapshot.
+
+    Scoring is stateless; ``last_breakdown`` additionally retains the most
+    recent ``select()``'s per-worker weighted score terms (cache / memory /
+    queue / load / slo / prefix) so the scheduler can attach the full routing
+    rationale to its ``route`` trace event without re-deriving Eq 1.
+    """
 
     def __init__(self, config: Optional[FlowGuardConfig] = None):
         self.config = config or FlowGuardConfig()
+        # worker -> (cache, memory, queue, load, slo, prefix) weighted terms
+        self.last_breakdown: Dict[int, Tuple[float, ...]] = {}
 
     # ----------------------------------------------------------- Eq 1
-    def score(self, m: WorkerMetrics) -> float:
+    def score_terms(self, m: WorkerMetrics) -> Tuple[float, float, float, float]:
+        """Eq 1's four weighted terms (cache, memory, queue, load)."""
         c = self.config
         q_norm = min(m.queue_depth / c.q_max, 1.0)
         return (
-            c.alpha_cache * m.cache_hit_rate
-            + c.alpha_memory * (1.0 - m.memory_utilization)
-            + c.alpha_queue * (1.0 - q_norm)
-            + c.alpha_load * (1.0 - m.active_load)
+            c.alpha_cache * m.cache_hit_rate,
+            c.alpha_memory * (1.0 - m.memory_utilization),
+            c.alpha_queue * (1.0 - q_norm),
+            c.alpha_load * (1.0 - m.active_load),
         )
+
+    def score(self, m: WorkerMetrics) -> float:
+        return sum(self.score_terms(m))
 
     # ----------------------------------------------------------- Eq 2–3
     def overload_score(self, m: WorkerMetrics) -> float:
@@ -126,22 +138,37 @@ class FlowGuard:
             raise RuntimeError("FlowGuard: no healthy workers")
         scores: Dict[int, float] = {}
         avail: List[int] = []
+        self.last_breakdown = {}
         for i in candidates:
             m = metrics[i]
             if m.is_stale(now, self.config.staleness_s):
                 continue
             if self.is_overloaded(m):
                 continue
-            scores[i] = self.score(m)
+            terms = self.score_terms(m)
+            slo_term = 0.0
             if queue_delays is not None:
-                scores[i] += self.slo_slack_term(request, queue_delays.get(i, 0.0), now)
+                slo_term = self.slo_slack_term(request, queue_delays.get(i, 0.0), now)
+            prefix_term = 0.0
             if prefix_scores is not None:
                 hit = min(max(prefix_scores.get(i, 0.0), 0.0), 1.0)
-                scores[i] += self.config.prefix_weight * hit
+                prefix_term = self.config.prefix_weight * hit
+            scores[i] = sum(terms) + slo_term + prefix_term
+            self.last_breakdown[i] = (*terms, slo_term, prefix_term)
             avail.append(i)
         if not avail:
-            # Eq 4 fallback: least-loaded queue among healthy candidates
-            fallback = min(candidates, key=lambda i: metrics[i].queue_depth)
+            # Eq 4 fallback: least-loaded queue among healthy candidates —
+            # preferring workers with fresh snapshots.  A stale worker (no
+            # metric report within staleness_s) only wins when EVERY healthy
+            # candidate is stale: routing blind to a silent worker on the
+            # strength of an old queue-depth reading defeats the staleness
+            # guard above.
+            fresh = [
+                i for i in candidates
+                if not metrics[i].is_stale(now, self.config.staleness_s)
+            ]
+            pool = fresh or candidates
+            fallback = min(pool, key=lambda i: (metrics[i].queue_depth, i))
             return fallback, scores
         best = max(avail, key=lambda i: (scores[i], -i))
         return best, scores

@@ -8,6 +8,7 @@ and the real engine drive the same code.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -60,6 +61,22 @@ class RequestRecord:
     cancelled: bool = False
     # mean per-row speculation depth over the request's verify steps
     mean_depth: float = 0.0
+    # ---- phase-attributed latency (StreamTrace span assembly) -------------
+    # queued + prefill + decode + stall == latency, all in engine ticks; see
+    # repro.obs.spans.compute_phases for the attribution rules
+    phase_queued: float = 0.0
+    phase_prefill: float = 0.0
+    phase_decode: float = 0.0
+    phase_stall: float = 0.0
+
+    @property
+    def phases(self) -> Dict[str, float]:
+        return {
+            "queued": self.phase_queued,
+            "prefill": self.phase_prefill,
+            "decode": self.phase_decode,
+            "stall": self.phase_stall,
+        }
 
     @property
     def latency(self) -> float:
@@ -122,11 +139,19 @@ class PerformanceMonitor:
         self._last_collect = self.clock()
 
     # ------------------------------------------------------------- updates
-    def update_worker(self, worker_id: int, **kwargs) -> None:
+    def update_worker(self, worker_id: int, *, touch: bool = True, **kwargs) -> None:
+        """Set metric fields on a worker snapshot.
+
+        ``touch=False`` updates values WITHOUT refreshing the staleness
+        timestamp — for derived refreshes (e.g. the scheduler re-reading
+        queue depth at routing time) that must not make a silent worker look
+        freshly reported (``is_stale`` would never fire).
+        """
         m = self.workers[worker_id]
         for k, v in kwargs.items():
             setattr(m, k, v)
-        m.timestamp = self.clock()
+        if touch:
+            m.timestamp = self.clock()
 
     def record_tokens(self, worker_id: int, n_tokens: int, now: Optional[float] = None) -> None:
         now = self.clock() if now is None else now
@@ -171,7 +196,10 @@ class PerformanceMonitor:
         tputs = [r.throughput for r in served]
 
         def pct(vals: List[float], p: float) -> float:
-            idx = min(int(p / 100.0 * len(vals)), len(vals) - 1)
+            # nearest-rank percentile: ceil(p/100 * n) - 1.  The previous
+            # int(p/100 * n) index read one rank high on exact multiples
+            # (p50 of 4 samples -> index 2 instead of 1)
+            idx = max(math.ceil(p / 100.0 * len(vals)) - 1, 0)
             return vals[idx]
 
         t0 = min(r.t_start for r in served)
@@ -202,6 +230,12 @@ class PerformanceMonitor:
             "ttft_p50": pct(ttfts, 50),
             "ttft_p99": pct(ttfts, 99),
             "tpot_mean": sum(tpots) / len(tpots) if tpots else 0.0,
+            # phase-attributed latency means (queued + prefill + decode +
+            # stall == latency per request; see RequestRecord.phases)
+            "phase_queued_mean": sum(r.phase_queued for r in served) / len(served),
+            "phase_prefill_mean": sum(r.phase_prefill for r in served) / len(served),
+            "phase_decode_mean": sum(r.phase_decode for r in served) / len(served),
+            "phase_stall_mean": sum(r.phase_stall for r in served) / len(served),
             "throughput_mean": sum(tputs) / len(tputs) if tputs else 0.0,
             "aggregate_tput": total_tokens / max(t1 - t0, 1e-9),
             "makespan": t1 - t0,

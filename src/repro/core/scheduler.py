@@ -29,6 +29,17 @@ from typing import Callable, Deque, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.flowguard import FlowGuard
 from repro.core.metrics import PerformanceMonitor, RequestRecord
+from repro.obs.spans import request_phases
+from repro.obs.trace import (
+    EV_EDF_POP,
+    EV_ENQUEUE,
+    EV_FAIL,
+    EV_METRICS_STALE,
+    EV_ROUTE,
+    EV_SHED,
+    EV_SUBMIT,
+    NullRecorder,
+)
 from repro.serving.request import Request, RequestState
 
 
@@ -58,10 +69,12 @@ class StreamScheduler:
         *,
         slo_routing: bool = False,
         delay_estimator: Optional[Callable[[Request], float]] = None,
+        trace=None,
     ):
         self.n_pairs = n_pairs
         self.router: Router = router or FlowGuard()
         self.monitor = monitor or PerformanceMonitor(n_pairs)
+        self.trace = trace if trace is not None else NullRecorder()
         self.prefill_queues: Dict[int, Deque[Request]] = {i: deque() for i in range(n_pairs)}
         self.healthy: Dict[int, bool] = {i: True for i in range(n_pairs)}
         self.routing_log: List[Tuple[str, int]] = []
@@ -123,10 +136,21 @@ class StreamScheduler:
         return delay
 
     def submit(self, req: Request, now: float) -> int:
+        tr = self.trace
+        if tr.enabled:
+            tr.emit(now, -1, EV_SUBMIT, req.request_id,
+                    (req.prompt_len, req.slo_ttft, req.slo_tpot))
         healthy = [i for i, ok in self.healthy.items() if ok]
-        # FlowGuard reads queue depth live (Alg 2: fresh values)
+        # FlowGuard reads queue depth live (Alg 2: fresh values) — but a
+        # derived refresh must NOT touch the staleness timestamp: a worker
+        # that stopped reporting (crashed mid-collection, drained) would
+        # otherwise score as fresh forever and keep attracting traffic
         for i in healthy:
-            self.monitor.update_worker(i, queue_depth=self.queue_depth(i))
+            if tr.enabled and self.monitor.workers[i].is_stale(now):
+                tr.emit(now, i, EV_METRICS_STALE, None,
+                        (round(now - self.monitor.workers[i].timestamp, 6),))
+            self.monitor.update_worker(i, queue_depth=self.queue_depth(i),
+                                       touch=False)
         extra = {}
         if self.prefix_probe is not None and self._router_prefix_aware:
             extra["prefix_scores"] = {i: self.prefix_probe(i, req) for i in healthy}
@@ -147,6 +171,14 @@ class StreamScheduler:
             req.arrival_time = now
         self.prefill_queues[worker].append(req)
         self.routing_log.append((req.request_id, worker))
+        if tr.enabled:
+            bd = getattr(self.router, "last_breakdown", None)
+            breakdown = tuple(
+                (i, *terms) for i, terms in sorted(bd.items())
+            ) if bd else ()
+            tr.emit(now, -1, EV_ROUTE, req.request_id, (worker, breakdown))
+            tr.emit(now, worker, EV_ENQUEUE, req.request_id,
+                    (len(self.prefill_queues[worker]),))
         return worker
 
     def next_for_prefill(self, worker_id: int, now: Optional[float] = None) -> Optional[Request]:
@@ -163,6 +195,11 @@ class StreamScheduler:
             idx = min(range(len(q)), key=lambda i: edf_deadline(q[i]))
             req = q[idx]
             del q[idx]
+            if self.trace.enabled and idx != 0:
+                # EDF reorder: the pop jumped the FIFO head
+                self.trace.emit(now if now is not None else 0.0, worker_id,
+                                EV_EDF_POP, req.request_id,
+                                (idx, edf_deadline(req)))
             # slack already negative: the deadline passed while queued, so
             # even immediate service (this very tick) can only miss
             if now is not None and req.slo_ttft is not None and now > edf_deadline(req):
@@ -178,6 +215,7 @@ class StreamScheduler:
         req.state = RequestState.FAILED
         req.error = reason
         req.t_end = now
+        queued, prefill, decode, stall = request_phases(req)
         self.monitor.complete_request(
             RequestRecord(
                 request_id=req.request_id,
@@ -191,12 +229,22 @@ class StreamScheduler:
                 slo_tpot=req.slo_tpot,
                 slo_infeasible=slo_infeasible,
                 kv_requeued=getattr(req, "kv_requeued", 0),
+                phase_queued=queued,
+                phase_prefill=prefill,
+                phase_decode=decode,
+                phase_stall=stall,
             )
         )
+        if self.trace.enabled:
+            self.trace.emit(now, req.worker_id, EV_FAIL, req.request_id,
+                            (reason, queued, prefill, decode, stall))
 
     def _shed(self, req: Request, now: float) -> None:
         """Admission guard: fail an SLO-infeasible request terminally."""
         self.shed.append(req)
+        if self.trace.enabled:
+            self.trace.emit(now, req.worker_id, EV_SHED, req.request_id,
+                            (edf_deadline(req),))
         self.fail_request(req, now, "slo_infeasible", slo_infeasible=True)
 
     def queue_depth(self, worker_id: int) -> int:

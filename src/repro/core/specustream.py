@@ -200,6 +200,17 @@ class SpecuStream:
         self.last_decision = decision
         return decision
 
+    def snapshot(self) -> Tuple[float, int, float, float]:
+        """(depth, bucket_depth, flow_magnitude, projected_throughput) of the
+        last decision — flat host floats for trace payloads and gauges."""
+        d = self.last_decision
+        if d is None:
+            return (0.0, 0, 0.0, 0.0)
+        return (
+            round(d.depth, 4), d.bucket_depth,
+            round(d.flow_magnitude, 6), round(d.projected_throughput, 3),
+        )
+
 
 class FixedSpeculation:
     """Ablation baseline: fixed depth d (paper Table 9) or d=0 (no spec,
@@ -207,9 +218,16 @@ class FixedSpeculation:
 
     def __init__(self, depth: int):
         self.depth = depth
+        self.last_decision: Optional[SpecDecision] = None
 
     def observe_slot(self, slot: int, accepted_frac: float) -> None:
         pass
+
+    def snapshot(self) -> Tuple[float, int, float, float]:
+        d = self.last_decision
+        if d is None:
+            return (float(max(self.depth, 0)), 0, 0.0, 0.0)
+        return (d.depth, d.bucket_depth, 0.0, round(d.projected_throughput, 3))
 
     def reset_slot(self, slot: int) -> None:
         pass
@@ -226,7 +244,7 @@ class FixedSpeculation:
 
     def adapt(self, acceptance_rate: float, load: float, throughput: float) -> SpecDecision:
         d = max(self.depth, 0)
-        return SpecDecision(
+        decision = SpecDecision(
             depth=float(d),
             bucket_depth=snap_to_bucket(d) if d >= DEPTH_BUCKETS[0] else 0,
             micro_batch=max(1, int(16 * 5 / d)) if d > 0 else 16,
@@ -234,6 +252,8 @@ class FixedSpeculation:
             flow_magnitude=0.0,
             gradient=0.0,
         )
+        self.last_decision = decision
+        return decision
 
 
 @register_spec_policy("specustream")

@@ -33,6 +33,8 @@ _CONFIG_FLAGS = {
     "spec_policy": "spec_policy",
     "fixed_depth": "fixed_depth",
     "seed": "seed",
+    "trace": "trace",
+    "trace_dir": "trace_dir",
 }
 
 # CLI defaults for a quick CPU run (applied only when no --config file)
@@ -65,7 +67,16 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--cancel-one", action="store_true",
                     help="cancel the last submitted request mid-run")
     ap.add_argument("--seed", type=int, default=S, help="PRNG seed (default 0)")
+    ap.add_argument("--trace", default=S, choices=("off", "on", "flight"),
+                    help="StreamTrace mode (default off)")
+    ap.add_argument("--trace-dir", default=S,
+                    help="directory for flight-recorder dumps")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON here after the run "
+                         "(implies --trace on unless set)")
     args = ap.parse_args(argv)
+    if args.trace_out and not hasattr(args, "trace"):
+        args.trace = "on"
 
     # heavy imports (jax &c) only after argument parsing
     from repro.api import ServeConfig, StreamServe
@@ -138,6 +149,10 @@ def main(argv=None) -> Dict[str, Any]:
 
         print(f"sample SLO ({slo['request_id']}): ttft={fmt(slo['ttft'], '.0f')} "
               f"tpot={fmt(slo['tpot'], '.2f')} latency={fmt(slo['latency'], '.0f')} ticks")
+    if args.trace_out:
+        serve.export_chrome_trace(args.trace_out)
+        print(f"wrote Chrome trace to {args.trace_out} "
+              f"(open in chrome://tracing or ui.perfetto.dev)")
     return {"summary": s, "serve": serve, "config": cfg}
 
 

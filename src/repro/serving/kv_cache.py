@@ -132,6 +132,9 @@ class BlockPool:
         self.free: Deque[int] = deque(range(n_blocks))
         self.hash_index: Dict[int, int] = {}  # content_hash -> block_id
         self.radix = RadixIndex()
+        # observability counters (monotonic; exported via Prometheus)
+        self.resurrections = 0   # cached freed blocks revived off the free list
+        self.lazy_evictions = 0  # cached freed prefixes recycled (hash dropped)
 
     # ------------------------------------------------------------- registry
     def lookup(self, content_hash: int) -> Optional[int]:
@@ -164,6 +167,7 @@ class BlockPool:
             b = self.blocks[bid]
             if b.ref_count == 0:  # cached freed block: revive off the free list
                 self.free.remove(bid)
+                self.resurrections += 1
             b.ref_count += 1
             return bid
         return self.allocate_fresh(content_hash, parent_hash)
@@ -175,6 +179,8 @@ class BlockPool:
             return None
         bid = self.free.popleft()  # FIFO: reuse the oldest-freed block
         b = self.blocks[bid]
+        if b.content_hash is not None and b.ref_count == 0:
+            self.lazy_evictions += 1
         self._unregister(b)  # lazy eviction of a cached freed prefix
         b.ref_count = 1
         if content_hash is not None and content_hash not in self.hash_index:
@@ -406,3 +412,7 @@ class KVCacheManager:
     @property
     def memory_utilization(self) -> float:
         return self.pool.utilization
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.pool.free)

@@ -60,6 +60,10 @@ class Request:
     # per-verify-step speculation depths this request ran at (observability
     # for the per-row depth controller; averaged onto its RequestRecord)
     spec_depths: List[int] = dataclasses.field(default_factory=list)
+    # chunked-prefill lane turns actually granted to this request (one per
+    # served chunk) — the span assembler splits the prefill window into
+    # active service vs preemption stall with this; 0 on one-shot admission
+    prefill_active_ticks: int = 0
 
     @property
     def prompt_len(self) -> int:

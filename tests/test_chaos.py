@@ -121,13 +121,50 @@ def test_paged_worker_death_conserves_page_refcounts(engine_factory,
     assert survivor.kv.pool.used == 0 and not survivor.kv.seqs
 
 
+def test_flight_recorder_captures_worker_kill(engine_factory, trace_factory,
+                                              tmp_path):
+    """trace='flight' chaos drill: a mid-decode worker kill must leave a
+    non-empty flight dump (reason, worker_fail event, terminal phases for
+    retained requests) without breaking record conservation."""
+    eng = engine_factory(n_pairs=2, trace="flight",
+                         trace_dir=str(tmp_path))
+    reqs = trace_factory("bursty", n=6, seed=26, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    victim = None
+    for _ in range(40):
+        eng.step()
+        for p in eng.pairs:
+            if p.active_slots() and any(
+                req is not None and req.output_tokens for req in p.slot_req
+            ):
+                victim = p.worker_id
+                break
+        if victim is not None:
+            break
+    assert victim is not None, "no pair reached mid-decode"
+    eng.fail_worker(victim)
+    eng.run_until_done(max_steps=1500)
+    _assert_no_dropped_records(eng, reqs)
+    # the black box is written and non-empty
+    assert eng.flight_dumps, "fail_worker produced no flight dump"
+    dump = eng.flight_dumps[0]
+    assert dump["reason"] == "fail_worker" and dump["events"]
+    names = {ev[3] for ev in dump["events"]}
+    assert "worker_fail" in names
+    on_disk = list(tmp_path.glob("flight_fail_worker_*.json"))
+    assert on_disk, "flight dump not persisted to trace_dir"
+
+
 def test_chaos_replay_is_deterministic(engine_factory, trace_factory):
-    """Same seed, same kill tick => identical terminal outcome.  Divergence
-    here is exactly what FL4 exists to prevent (hash()/set-order/global-RNG
-    leaking into reroute decisions)."""
+    """Same seed, same kill tick => identical terminal outcome AND an
+    identical trace event stream.  Divergence here is exactly what FL4
+    exists to prevent (hash()/set-order/global-RNG leaking into reroute
+    decisions) — the event stream catches mid-flight divergence that
+    identical terminal states would mask."""
 
     def run_once():
-        eng = engine_factory(n_pairs=2)
+        eng = engine_factory(n_pairs=2, trace="on")
         reqs = trace_factory("bursty", n=4, seed=24, max_new=6)
         for r in reqs:
             eng.submit(r)
@@ -137,7 +174,18 @@ def test_chaos_replay_is_deterministic(engine_factory, trace_factory):
         eng.run_until_done(max_steps=1500)
         _assert_no_dropped_records(eng, reqs)
         # key by submission index: request_id is a process-global counter
-        return {i: (r.state, tuple(r.output_tokens), r.worker_id)
-                for i, r in enumerate(reqs)}
+        order = {r.request_id: f"req#{i}" for i, r in enumerate(reqs)}
+        events = [
+            (seq, tick, worker, etype, order.get(rid, rid),
+             tuple(order.get(x, x) if isinstance(x, str) else x
+                   for x in payload))
+            for seq, tick, worker, etype, rid, payload in eng.trace_events()
+        ]
+        outcome = {i: (r.state, tuple(r.output_tokens), r.worker_id)
+                   for i, r in enumerate(reqs)}
+        return outcome, events
 
-    assert run_once() == run_once()
+    out_a, ev_a = run_once()
+    out_b, ev_b = run_once()
+    assert out_a == out_b
+    assert ev_a == ev_b

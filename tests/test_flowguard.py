@@ -67,6 +67,21 @@ def test_stale_metrics_excluded():
     assert best == 1
 
 
+def test_fallback_prefers_fresh_over_stale():
+    """Eq 4 fallback must not hand traffic to a stale worker while a fresh
+    (if overloaded) candidate exists — an old queue-depth reading from a
+    silent worker is not evidence it is the least loaded."""
+    fg = FlowGuard()
+    # worker 0: fresh but overloaded; worker 1: stale with an (old) empty queue
+    metrics = {0: _m(0, mem=0.9, q=9, ts=100.0), 1: _m(1, q=0, ts=0.0)}
+    best, scores = fg.select(metrics, now=100.0)
+    assert best == 0 and scores == {}
+    # every candidate stale -> min queue depth among them (blind Eq 4)
+    metrics = {0: _m(0, q=9, ts=0.0), 1: _m(1, q=3, ts=0.0)}
+    best, _ = fg.select(metrics, now=100.0)
+    assert best == 1
+
+
 def test_healthy_filter():
     fg = FlowGuard()
     metrics = {0: _m(0, cache=1.0), 1: _m(1, cache=0.0)}

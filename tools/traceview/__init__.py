@@ -1,0 +1,1 @@
+"""traceview — stdlib CLI over StreamTrace flight-recorder dumps."""

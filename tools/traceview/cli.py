@@ -1,0 +1,167 @@
+"""traceview — render a StreamTrace flight-recorder dump in the terminal.
+
+Stdlib-only (argparse + json): reads the JSON written by the engine's
+flight recorder (``PipeServeEngine._flight_dump`` / ``TraceRecorder.to_dump``)
+and prints:
+
+* a header (dump reason, tick, dropped-event count) and an event-type
+  histogram,
+* the top-K slowest requests with their phase-attributed latency breakdown
+  (queued / prefill / decode / stalls, from the terminal finish/cancel/fail
+  payloads),
+* per-worker occupancy: decode steps, mean batch occupancy, tokens emitted
+  and mean queue depth.
+
+    python -m tools.traceview flight_fail_worker_tick7.json
+    python -m tools.traceview dump.json --top 5 --events
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+# terminal payload layouts (mirrors repro.obs.trace.EVENT_SCHEMAS; duplicated
+# here so the viewer stays stdlib-only and runs without PYTHONPATH=src)
+_PHASES = ("queued", "prefill", "decode", "stalls")
+_TERMINAL_PHASE_OFFSET = {"finish": 2, "cancel": 1, "fail": 1}
+
+
+def load_dump(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        dump = json.load(f)
+    if not isinstance(dump, dict) or "events" not in dump:
+        raise ValueError(f"{path} is not a StreamTrace dump (no 'events' key)")
+    return dump
+
+
+def event_histogram(events: Sequence[List[Any]]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for ev in events:
+        name = ev[3]
+        counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def slowest_requests(events: Sequence[List[Any]], top: int = 10) -> List[Dict[str, Any]]:
+    """Terminal requests ranked by end-to-end latency (sum of phases)."""
+    rows: List[Dict[str, Any]] = []
+    for _seq, tick, worker, name, rid, data in events:
+        off = _TERMINAL_PHASE_OFFSET.get(name)
+        if off is None or rid is None:
+            continue
+        phases = {p: float(data[off + i]) for i, p in enumerate(_PHASES)}
+        rows.append({
+            "request": rid,
+            "worker": worker,
+            "state": name,
+            "end_tick": tick,
+            "latency": round(sum(phases.values()), 3),
+            **phases,
+        })
+    rows.sort(key=lambda r: (-r["latency"], r["request"]))
+    return rows[:top]
+
+
+def worker_occupancy(events: Sequence[List[Any]]) -> List[Dict[str, Any]]:
+    """Per-worker decode-lane utilisation from decode_step/counters events."""
+    acc: Dict[int, Dict[str, float]] = {}
+    for _seq, _tick, worker, name, _rid, data in events:
+        if worker < 0:
+            continue
+        w = acc.setdefault(worker, {
+            "steps": 0, "occupancy": 0.0, "emitted": 0,
+            "queue_samples": 0, "queue_depth": 0.0,
+        })
+        if name == "decode_step":
+            w["steps"] += 1
+            w["occupancy"] += data[0]
+            w["emitted"] += data[3]
+        elif name == "counters":
+            w["queue_samples"] += 1
+            w["queue_depth"] += data[0]
+    out = []
+    for worker in sorted(acc):
+        w = acc[worker]
+        out.append({
+            "worker": worker,
+            "decode_steps": int(w["steps"]),
+            "mean_occupancy": round(w["occupancy"] / w["steps"], 2) if w["steps"] else 0.0,
+            "tokens_emitted": int(w["emitted"]),
+            "mean_queue_depth": (
+                round(w["queue_depth"] / w["queue_samples"], 2)
+                if w["queue_samples"] else 0.0
+            ),
+        })
+    return out
+
+
+def render(dump: Dict[str, Any], top: int = 10, show_events: bool = False) -> str:
+    events = dump["events"]
+    lines: List[str] = []
+    lines.append(
+        f"StreamTrace dump  schema={dump.get('schema', '?')}  "
+        f"reason={dump.get('reason') or '-'}  tick={dump.get('tick', 0)}  "
+        f"events={len(events)}  dropped={dump.get('dropped', 0)}"
+    )
+    lines.append("")
+    lines.append("event histogram:")
+    hist = event_histogram(events)
+    for name in sorted(hist, key=lambda n: (-hist[n], n)):
+        lines.append(f"  {name:16s} {hist[name]:6d}")
+    lines.append("")
+    lines.append(f"top {top} slowest requests (phase-attributed, ticks):")
+    rows = slowest_requests(events, top)
+    if rows:
+        lines.append(
+            f"  {'request':14s} {'state':7s} {'wkr':>3s} {'latency':>8s} "
+            f"{'queued':>7s} {'prefill':>8s} {'decode':>7s} {'stalls':>7s}"
+        )
+        for r in rows:
+            lines.append(
+                f"  {r['request']:14s} {r['state']:7s} {r['worker']:3d} "
+                f"{r['latency']:8.1f} {r['queued']:7.1f} {r['prefill']:8.1f} "
+                f"{r['decode']:7.1f} {r['stalls']:7.1f}"
+            )
+    else:
+        lines.append("  (no terminal requests in the retained window)")
+    lines.append("")
+    lines.append("per-worker occupancy:")
+    occ = worker_occupancy(events)
+    if occ:
+        for w in occ:
+            lines.append(
+                f"  pair{w['worker']}: {w['decode_steps']} decode steps, "
+                f"mean occupancy {w['mean_occupancy']}, "
+                f"{w['tokens_emitted']} tokens, "
+                f"mean queue depth {w['mean_queue_depth']}"
+            )
+    else:
+        lines.append("  (no worker events)")
+    if show_events:
+        lines.append("")
+        lines.append("events (seq tick worker type request data):")
+        for seq, tick, worker, name, rid, data in events:
+            lines.append(f"  {seq:6d} {tick:8.1f} {worker:3d} {name:16s} "
+                         f"{rid or '-':14s} {data}")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="traceview", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("dump", help="flight-recorder dump JSON")
+    ap.add_argument("--top", type=int, default=10,
+                    help="how many slowest requests to show (default 10)")
+    ap.add_argument("--events", action="store_true",
+                    help="also print the raw event stream")
+    args = ap.parse_args(argv)
+    try:
+        dump = load_dump(args.dump)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"traceview: {e}")
+        return 1
+    print(render(dump, top=args.top, show_events=args.events))
+    return 0
