@@ -12,7 +12,11 @@ Extension points (string-keyed registries)::
     from repro.api import register_router, register_draft, register_spec_policy
 """
 from repro.api.config import ServeConfig  # noqa: F401
-from repro.api.frontend import RequestHandle, StreamServe  # noqa: F401
+from repro.api.frontend import (  # noqa: F401
+    RequestFailedError,
+    RequestHandle,
+    StreamServe,
+)
 from repro.api.registry import (  # noqa: F401
     DRAFTS,
     ROUTERS,
@@ -29,6 +33,7 @@ __all__ = [
     "ServeConfig",
     "StreamServe",
     "RequestHandle",
+    "RequestFailedError",
     "ROUTERS",
     "DRAFTS",
     "SPEC_POLICIES",

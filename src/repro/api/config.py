@@ -74,6 +74,13 @@ class ServeConfig:
                                      # shared depth when they are disabled)
     slo_routing: bool = True         # TTFT-slack routing + EDF prefill order
                                      # + shed-infeasible admission guard
+    # ---- HTTP gateway ------------------------------------------------------
+    gateway_host: str = "127.0.0.1"  # bind address for the asyncio gateway
+    gateway_port: int = 8080         # TCP port (0 = ephemeral, OS-assigned)
+    gateway_max_pending: int = 256   # backpressure: submissions beyond this
+                                     # StreamServe.pending watermark get
+                                     # HTTP 429 + Retry-After instead of
+                                     # queueing without bound
     # ---- StreamTrace observability ----------------------------------------
     trace: str = "off"               # "off" (zero-cost no-op), "on" (full
                                      # tracing + exporters), "flight" (ring
@@ -104,6 +111,7 @@ class ServeConfig:
             ("kv_block_size", 1), ("max_ngram", 1), ("draft_layers", 1),
             ("fixed_depth", 0), ("max_new_tokens", 1),
             ("prefill_bucket_min", 1), ("admit_batch", 1),
+            ("gateway_max_pending", 1), ("gateway_port", 0),
         ]:
             v = getattr(self, field)
             if not isinstance(v, int) or v < lo:
@@ -155,6 +163,14 @@ class ServeConfig:
                     f"paged_kv requires max_len ({self.max_len}) to be a "
                     f"multiple of kv_block_size ({self.kv_block_size})"
                 )
+        if self.gateway_port > 65535:
+            raise ValueError(
+                f"gateway_port must be 0..65535 (got {self.gateway_port})"
+            )
+        if not isinstance(self.gateway_host, str) or not self.gateway_host:
+            raise ValueError(
+                f"gateway_host must be a non-empty str (got {self.gateway_host!r})"
+            )
         if self.trace not in ("off", "on", "flight"):
             raise ValueError(
                 f"trace must be 'off', 'on' or 'flight' (got {self.trace!r})"

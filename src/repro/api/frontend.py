@@ -24,6 +24,28 @@ from repro.serving.request import Request, RequestState, SamplingParams
 _TERMINAL = (RequestState.FINISHED, RequestState.FAILED, RequestState.CANCELLED)
 
 
+class RequestFailedError(RuntimeError):
+    """A request terminated ``FAILED`` (shed, ``no_healthy_workers``,
+    ``exceeds_max_context``, KV requeue-fail...).
+
+    Raised by :meth:`RequestHandle.stream` / :meth:`RequestHandle.result`
+    once the failure is reached, so callers can no longer mistake a partial
+    transcript for a successful completion.  Carries the engine's terminal
+    ``error`` string and whatever tokens were emitted before the failure
+    (the HTTP gateway maps this onto an error frame / status code).
+    """
+
+    def __init__(self, request_id: str, error: Optional[str],
+                 partial_tokens: List[int]):
+        self.request_id = request_id
+        self.error = error or "failed"
+        self.partial_tokens = list(partial_tokens)
+        super().__init__(
+            f"{request_id} failed: {self.error} "
+            f"({len(self.partial_tokens)} tokens emitted before failure)"
+        )
+
+
 class RequestHandle:
     """Live view of one submitted request.
 
@@ -75,7 +97,13 @@ class RequestHandle:
 
     # ------------------------------------------------------------- streaming
     def stream(self, max_stall_steps: int = 10_000) -> Iterator[int]:
-        """Yield output tokens as they are emitted, driving the engine."""
+        """Yield output tokens as they are emitted, driving the engine.
+
+        Raises :class:`RequestFailedError` once the request terminates
+        ``FAILED`` — emitted tokens are yielded first, then the failure
+        surfaces instead of a silent partial transcript.  Cancellation
+        (the caller's own action) still ends the stream quietly.
+        """
         stalled = 0
         while True:
             out = self.request.output_tokens
@@ -86,6 +114,10 @@ class RequestHandle:
                 yield tok
                 continue
             if self.done:
+                if self.request.state is RequestState.FAILED:
+                    raise RequestFailedError(
+                        self.request_id, self.request.error, out
+                    )
                 return
             self._serve.step()
             stalled += 1
@@ -96,7 +128,10 @@ class RequestHandle:
                 )
 
     def result(self, max_stall_steps: int = 10_000) -> List[int]:
-        """Block (drive the engine) until terminal; return all output tokens."""
+        """Block (drive the engine) until terminal; return all output tokens.
+
+        Raises :class:`RequestFailedError` if the request terminated
+        ``FAILED`` (partial output rides on the exception)."""
         for _ in self.stream(max_stall_steps=max_stall_steps):
             pass
         return list(self.request.output_tokens)
@@ -109,8 +144,10 @@ class RequestHandle:
         """Latency metadata in engine ticks (wall-clock on real hardware)."""
         req = self.request
         arrived = req.arrival_time if req.arrival_time is not None else 0.0
-        ttft = (req.t_first_token - arrived) if req.t_first_token else None
-        latency = (req.t_end - arrived) if self.done and req.t_end else None
+        # `is not None`, never truthiness: a first token (or completion)
+        # landing at tick 0 is a real measurement, not a missing one
+        ttft = (req.t_first_token - arrived) if req.t_first_token is not None else None
+        latency = (req.t_end - arrived) if self.done and req.t_end is not None else None
         tpot = req.measured_tpot()
         return {
             "request_id": req.request_id,
@@ -260,10 +297,23 @@ class StreamServe:
         return self.engine.monitor.summary()
 
     def worker_stats(self) -> List[Dict[str, Any]]:
-        """Per-pair operational snapshot (routing/speculation signals)."""
+        """Per-pair operational snapshot (routing/speculation signals).
+
+        Never raises on a dead pair: a worker missing from the monitor
+        (however it got there) degrades to a ``healthy: False`` row instead
+        of a KeyError mid-scrape."""
         out = []
         for pair in self.engine.pairs:
-            m = self.engine.monitor.workers[pair.worker_id]
+            m = self.engine.monitor.workers.get(pair.worker_id)
+            if m is None:
+                out.append({
+                    "worker_id": pair.worker_id, "healthy": False,
+                    "acceptance": 0.0, "cache_hit_rate": 0.0,
+                    "queue_depth": 0, "active_load": 0.0,
+                    "spec_depth": None,
+                    "slot_depths": [None] * len(pair.slot_req),
+                })
+                continue
             d = getattr(pair.spec, "last_decision", None)
             out.append({
                 "worker_id": pair.worker_id,

@@ -219,7 +219,8 @@ class StreamScheduler:
         self.monitor.complete_request(
             RequestRecord(
                 request_id=req.request_id,
-                t_start=req.arrival_time or 0.0,
+                # `is not None`: an explicit tick-0 arrival is a real stamp
+                t_start=req.arrival_time if req.arrival_time is not None else 0.0,
                 t_end=now,
                 prompt_len=req.prompt_len,
                 generated=len(req.output_tokens),

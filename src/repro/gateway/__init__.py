@@ -1,0 +1,20 @@
+"""Async HTTP gateway: the network front door for :class:`StreamServe`.
+
+    from repro.api import ServeConfig, StreamServe
+    from repro.gateway import Gateway, run_gateway
+
+    serve = StreamServe(ServeConfig.reduced_smoke())
+    run_gateway(serve, port=8080)        # blocking; Ctrl-C to stop
+
+or from the CLI::
+
+    python -m repro.launch.serve --http --port 8080
+
+See :mod:`repro.gateway.server` for the endpoint surface and the
+single-threaded engine-driver design, :mod:`repro.gateway.http` for the
+stdlib HTTP/SSE layer, and :mod:`repro.gateway.client` for matching
+stdlib clients (tests + load bench).
+"""
+from repro.gateway.server import Gateway, GatewayThread, run_gateway  # noqa: F401
+
+__all__ = ["Gateway", "GatewayThread", "run_gateway"]

@@ -1,0 +1,225 @@
+"""Stdlib HTTP/SSE clients for the gateway — no requests/aiohttp in the image.
+
+Two flavours over the same wire format:
+
+* blocking ``socket`` clients (:func:`http_request`, :class:`SSEClient`) for
+  tests and simple drivers;
+* asyncio clients (:func:`arequest`, :func:`asse_collect`) for the load
+  benchmark, where hundreds of concurrent streaming connections live on one
+  event loop and every frame is timestamped with ``perf_counter``.
+
+Both speak exactly what :mod:`repro.gateway.http` serves: HTTP/1.1, one
+request per connection, ``Connection: close``, SSE frames as ``data:``
+lines separated by blank lines, terminated by ``data: [DONE]``.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import socket
+from time import perf_counter
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+def _encode_request(method: str, path: str, host: str,
+                    body: Optional[Any]) -> bytes:
+    payload = b""
+    if body is not None:
+        payload = body if isinstance(body, bytes) else json.dumps(body).encode()
+    head = (f"{method} {path} HTTP/1.1\r\n"
+            f"Host: {host}\r\n"
+            f"Content-Length: {len(payload)}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Connection: close\r\n\r\n")
+    return head.encode("latin-1") + payload
+
+
+def _parse_head(head: bytes) -> Tuple[int, Dict[str, str]]:
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split(None, 2)[1])
+    headers: Dict[str, str] = {}
+    for line in lines[1:]:
+        if ":" in line:
+            k, _, v = line.partition(":")
+            headers[k.strip().lower()] = v.strip()
+    return status, headers
+
+
+# ------------------------------------------------------------ blocking client
+def http_request(host: str, port: int, method: str, path: str,
+                 body: Optional[Any] = None, timeout: float = 120.0
+                 ) -> Tuple[int, Dict[str, str], bytes]:
+    """One buffered request/response exchange; returns (status, headers, body)."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.sendall(_encode_request(method, path, host, body))
+        data = b""
+        while b"\r\n\r\n" not in data:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed before headers")
+            data += chunk
+        head, _, rest = data.partition(b"\r\n\r\n")
+        status, headers = _parse_head(head)
+        want = int(headers.get("content-length", "-1"))
+        while want < 0 or len(rest) < want:
+            chunk = sock.recv(65536)
+            if not chunk:
+                break
+            rest += chunk
+        return status, headers, rest if want < 0 else rest[:want]
+
+
+class SSEClient:
+    """Blocking SSE reader with explicit ``close()`` (disconnect testing).
+
+    Iterate :meth:`events` for decoded ``data:`` payloads (``[DONE]`` ends
+    iteration); call :meth:`close` any time to drop the connection — the
+    gateway must notice and cancel the backing request.
+    """
+
+    def __init__(self, host: str, port: int, path: str, body: Any,
+                 timeout: float = 120.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.sock.sendall(_encode_request("POST", path, host, body))
+        self._buf = b""
+        head = self._read_until(b"\r\n\r\n")
+        self.status, self.headers = _parse_head(head)
+
+    def _read_until(self, sep: bytes) -> bytes:
+        while sep not in self._buf:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed the SSE stream early")
+            self._buf += chunk
+        out, _, self._buf = self._buf.partition(sep)
+        return out
+
+    def events(self) -> Iterator[Any]:
+        """Decoded frames until ``[DONE]`` (exclusive) or server close."""
+        while True:
+            try:
+                frame = self._read_until(b"\n\n")
+            except ConnectionError:
+                return
+            for line in frame.splitlines():
+                line = line.strip()
+                if not line.startswith(b"data:"):
+                    continue
+                payload = line[len(b"data:"):].strip()
+                if payload == b"[DONE]":
+                    return
+                yield json.loads(payload)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "SSEClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------- asyncio client
+async def arequest(host: str, port: int, method: str, path: str,
+                   body: Optional[Any] = None
+                   ) -> Tuple[int, Dict[str, str], bytes]:
+    """Async buffered request (the bench's non-streaming/cancel/metrics path)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(_encode_request(method, path, host, body))
+        await writer.drain()
+        raw = await reader.read()           # Connection: close — read to EOF
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, OSError):
+            pass
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    status, headers = _parse_head(head)
+    return status, headers, rest
+
+
+async def asse_collect(host: str, port: int, path: str, body: Any
+                       ) -> Dict[str, Any]:
+    """Run one streaming completion; timestamp every frame.
+
+    Returns ``{status, frames, frame_times, t_submit, t_first, t_last,
+    terminal, error}`` — the raw material for client-measured TTFT/TPOT.
+    All stamps are ``perf_counter`` seconds.
+    """
+    t_submit = perf_counter()
+    out: Dict[str, Any] = {
+        "status": None, "frames": [], "frame_times": [],
+        "t_submit": t_submit, "t_first": None, "t_last": None,
+        "terminal": None, "error": None,
+    }
+    try:
+        reader, writer = await asyncio.open_connection(host, port)
+    except OSError as e:
+        out["error"] = f"connect: {e}"
+        return out
+    try:
+        writer.write(_encode_request("POST", path, host, body))
+        await writer.drain()
+        buf = b""
+        while b"\r\n\r\n" not in buf:
+            chunk = await reader.read(65536)
+            if not chunk:
+                out["error"] = "closed before headers"
+                return out
+            buf += chunk
+        head, _, buf = buf.partition(b"\r\n\r\n")
+        out["status"], _headers = _parse_head(head)
+        if out["status"] != 200:
+            # error replies (429 etc.) carry a JSON body, not SSE frames
+            body_bytes = buf + await reader.read()
+            try:
+                out["terminal"] = json.loads(body_bytes)
+            except json.JSONDecodeError:
+                pass
+            return out
+        while True:
+            while b"\n\n" not in buf:
+                chunk = await reader.read(65536)
+                if not chunk:
+                    out["error"] = out["error"] or "closed mid-stream"
+                    return out
+                buf += chunk
+            frame, _, buf = buf.partition(b"\n\n")
+            for line in frame.splitlines():
+                line = line.strip()
+                if not line.startswith(b"data:"):
+                    continue
+                payload = line[len(b"data:"):].strip()
+                if payload == b"[DONE]":
+                    return out
+                now = perf_counter()
+                decoded = json.loads(payload)
+                if "error" in decoded or "usage" in decoded:
+                    out["terminal"] = decoded
+                    if "error" in decoded:
+                        out["error"] = decoded["error"].get("code", "failed")
+                else:
+                    if out["t_first"] is None:
+                        out["t_first"] = now
+                    out["t_last"] = now
+                    out["frames"].append(decoded)
+                    out["frame_times"].append(now)
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, OSError):
+            pass
+
+
+def completion_body(prompt: List[int], max_tokens: int, stream: bool = True,
+                    **extra) -> Dict[str, Any]:
+    """The ``/v1/completions`` request body both harnesses send."""
+    return {"prompt": prompt, "max_tokens": max_tokens,
+            "stream": stream, **extra}

@@ -1,0 +1,255 @@
+"""Minimal asyncio HTTP/1.1 server with SSE streaming — stdlib only.
+
+The container image carries no aiohttp/uvicorn, so the gateway speaks just
+enough HTTP/1.1 itself: request-line + headers + Content-Length bodies in,
+``Connection: close`` responses out (one request per connection — the load
+profile is hundreds of short-lived streaming clients, not keep-alive reuse).
+
+Two response shapes:
+
+* :class:`HTTPResponse` — a buffered status/headers/body reply
+  (``HTTPResponse.json`` for the JSON endpoints).
+* :class:`SSEResponse` — a ``text/event-stream`` reply whose body is an
+  async iterator of frames.  Each frame is written as ``data: <payload>``
+  followed by a blank line; client disconnect mid-stream is detected (the
+  read side hits EOF, or the write side RSTs) and reported through
+  ``on_disconnect`` so the gateway can cancel the backing request.
+
+This module knows nothing about the engine: the gateway proper
+(:mod:`repro.gateway.server`) supplies the ``async handler(request)``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+from typing import Any, AsyncIterator, Callable, Dict, Optional, Union
+from urllib.parse import parse_qsl, urlsplit
+
+MAX_BODY = 8 * 1024 * 1024      # request-body cap (tokenised prompts are small)
+MAX_HEADER_LINE = 16 * 1024
+
+STATUS_PHRASES = {
+    200: "OK", 202: "Accepted", 400: "Bad Request", 404: "Not Found",
+    405: "Method Not Allowed", 408: "Request Timeout", 409: "Conflict",
+    413: "Payload Too Large", 429: "Too Many Requests",
+    500: "Internal Server Error", 503: "Service Unavailable",
+}
+
+
+@dataclasses.dataclass
+class HTTPRequest:
+    method: str
+    path: str                      # path component only, query split off
+    query: Dict[str, str]
+    headers: Dict[str, str]        # keys lower-cased
+    body: bytes
+
+    def json(self) -> Any:
+        """Parse the body as JSON; raises ValueError on malformed input."""
+        if not self.body:
+            return {}
+        try:
+            return json.loads(self.body)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"malformed JSON body: {e}") from e
+
+
+@dataclasses.dataclass
+class HTTPResponse:
+    status: int = 200
+    headers: Dict[str, str] = dataclasses.field(default_factory=dict)
+    body: bytes = b""
+
+    @classmethod
+    def json(cls, obj: Any, status: int = 200,
+             headers: Optional[Dict[str, str]] = None) -> "HTTPResponse":
+        h = {"Content-Type": "application/json"}
+        if headers:
+            h.update(headers)
+        return cls(status=status, headers=h,
+                   body=json.dumps(obj).encode("utf-8"))
+
+    @classmethod
+    def text(cls, text: str, status: int = 200,
+             content_type: str = "text/plain; charset=utf-8") -> "HTTPResponse":
+        return cls(status=status, headers={"Content-Type": content_type},
+                   body=text.encode("utf-8"))
+
+    @classmethod
+    def error(cls, status: int, message: str, code: Optional[str] = None,
+              headers: Optional[Dict[str, str]] = None, **extra) -> "HTTPResponse":
+        payload = {"error": {"message": message,
+                             "type": code or STATUS_PHRASES.get(status, "error"),
+                             **extra}}
+        return cls.json(payload, status=status, headers=headers)
+
+
+class SSEResponse:
+    """Server-Sent Events stream.
+
+    ``source`` yields frames: a ``str`` is written verbatim as the ``data:``
+    payload, anything else is JSON-encoded first.  ``on_disconnect`` fires
+    exactly once if the client drops before the source is exhausted.
+    """
+
+    def __init__(self, source: AsyncIterator[Union[str, Dict[str, Any]]],
+                 on_disconnect: Optional[Callable[[], None]] = None,
+                 headers: Optional[Dict[str, str]] = None):
+        self.source = source
+        self.on_disconnect = on_disconnect
+        self.headers = {
+            "Content-Type": "text/event-stream",
+            "Cache-Control": "no-cache",
+            **(headers or {}),
+        }
+
+
+Handler = Callable[[HTTPRequest], Any]   # -> HTTPResponse | SSEResponse
+
+
+class AsyncHTTPServer:
+    """One-request-per-connection HTTP/1.1 server over asyncio streams."""
+
+    def __init__(self, handler: Handler, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.handler = handler
+        self.host = host
+        self.port = port             # 0 = ephemeral; real port set by start()
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> int:
+        self._server = await asyncio.start_server(
+            self._serve_connection, self.host, self.port
+        )
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self.port
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # ------------------------------------------------------------ connection
+    async def _serve_connection(self, reader: asyncio.StreamReader,
+                                writer: asyncio.StreamWriter) -> None:
+        try:
+            request = await self._read_request(reader)
+            if request is None:
+                return
+            try:
+                response = await self.handler(request)
+            except ValueError as e:       # handler-level validation error
+                response = HTTPResponse.error(400, str(e))
+            except Exception as e:        # never kill the accept loop
+                response = HTTPResponse.error(500, f"{type(e).__name__}: {e}")
+            if isinstance(response, SSEResponse):
+                await self._write_sse(response, reader, writer)
+            else:
+                await self._write_response(response, writer)
+        except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError, OSError):
+                pass
+
+    async def _read_request(self, reader: asyncio.StreamReader
+                            ) -> Optional[HTTPRequest]:
+        try:
+            line = await reader.readline()
+        except (ConnectionResetError, asyncio.LimitOverrunError):
+            return None
+        if not line or len(line) > MAX_HEADER_LINE:
+            return None
+        try:
+            method, target, _version = line.decode("latin-1").split(None, 2)
+        except ValueError:
+            return None
+        headers: Dict[str, str] = {}
+        while True:
+            line = await reader.readline()
+            if not line or line in (b"\r\n", b"\n"):
+                break
+            if len(line) > MAX_HEADER_LINE or len(headers) > 100:
+                return None
+            name, _, value = line.decode("latin-1").partition(":")
+            headers[name.strip().lower()] = value.strip()
+        length = int(headers.get("content-length", "0") or "0")
+        if length < 0 or length > MAX_BODY:
+            return None
+        body = await reader.readexactly(length) if length else b""
+        split = urlsplit(target)
+        return HTTPRequest(
+            method=method.upper(), path=split.path,
+            query=dict(parse_qsl(split.query)), headers=headers, body=body,
+        )
+
+    async def _write_response(self, resp: HTTPResponse,
+                              writer: asyncio.StreamWriter) -> None:
+        headers = {
+            "Content-Length": str(len(resp.body)),
+            "Connection": "close",
+            **resp.headers,
+        }
+        writer.write(self._head(resp.status, headers))
+        writer.write(resp.body)
+        await writer.drain()
+
+    async def _write_sse(self, resp: SSEResponse,
+                         reader: asyncio.StreamReader,
+                         writer: asyncio.StreamWriter) -> None:
+        """Stream frames, racing each one against client disconnect.
+
+        SSE clients never send bytes after the request, so any read
+        completion (data or EOF) means the peer is gone.  Waiting on the
+        read side catches disconnects even while the source is idle
+        between tokens — a write-side error alone would only surface at
+        the NEXT frame."""
+        writer.write(self._head(200, {**resp.headers, "Connection": "close"}))
+        await writer.drain()
+        aiter = resp.source.__aiter__()
+        eof_task = asyncio.ensure_future(reader.read(1))
+        disconnected = False
+        try:
+            while True:
+                next_task = asyncio.ensure_future(aiter.__anext__())
+                done, _ = await asyncio.wait(
+                    {next_task, eof_task},
+                    return_when=asyncio.FIRST_COMPLETED,
+                )
+                if eof_task in done and next_task not in done:
+                    next_task.cancel()
+                    disconnected = True
+                    break
+                try:
+                    frame = next_task.result()
+                except StopAsyncIteration:
+                    break
+                payload = frame if isinstance(frame, str) else json.dumps(frame)
+                try:
+                    writer.write(f"data: {payload}\n\n".encode("utf-8"))
+                    await writer.drain()
+                except (ConnectionResetError, BrokenPipeError, OSError):
+                    disconnected = True
+                    break
+        finally:
+            eof_task.cancel()
+            aclose = getattr(aiter, "aclose", None)
+            if aclose is not None:
+                try:
+                    await aclose()
+                except Exception:
+                    pass
+            if disconnected and resp.on_disconnect is not None:
+                resp.on_disconnect()
+
+    @staticmethod
+    def _head(status: int, headers: Dict[str, str]) -> bytes:
+        phrase = STATUS_PHRASES.get(status, "Unknown")
+        lines = [f"HTTP/1.1 {status} {phrase}"]
+        lines.extend(f"{k}: {v}" for k, v in headers.items())
+        return ("\r\n".join(lines) + "\r\n\r\n").encode("latin-1")

@@ -10,6 +10,7 @@ can be cancelled or a worker killed mid-run.
       --spec-policy fixed --fixed-depth 5    # ablation configuration
   python -m repro.launch.serve --no-reduced  # full-size model (TPU scale)
   python -m repro.launch.serve --config serve.yaml   # flags override the file
+  python -m repro.launch.serve --http --port 8080    # HTTP/SSE gateway mode
 """
 from __future__ import annotations
 
@@ -35,6 +36,9 @@ _CONFIG_FLAGS = {
     "seed": "seed",
     "trace": "trace",
     "trace_dir": "trace_dir",
+    "host": "gateway_host",
+    "port": "gateway_port",
+    "max_pending": "gateway_max_pending",
 }
 
 # CLI defaults for a quick CPU run (applied only when no --config file)
@@ -74,6 +78,20 @@ def main(argv=None) -> Dict[str, Any]:
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome-trace JSON here after the run "
                          "(implies --trace on unless set)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP (OpenAI-compatible /v1/completions "
+                         "with SSE streaming, /metrics, /healthz) instead of "
+                         "the synthetic request driver")
+    ap.add_argument("--host", default=S, help="gateway bind address "
+                    "(default 127.0.0.1)")
+    ap.add_argument("--port", type=int, default=S,
+                    help="gateway TCP port (default 8080; 0 = ephemeral)")
+    ap.add_argument("--max-pending", type=int, default=S,
+                    help="gateway backpressure watermark: pending requests "
+                         "beyond this get HTTP 429 (default 256)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every shape bucket before serving "
+                         "(gateway mode: no first-request compile stall)")
     args = ap.parse_args(argv)
     if args.trace_out and not hasattr(args, "trace"):
         args.trace = "on"
@@ -97,6 +115,14 @@ def main(argv=None) -> Dict[str, Any]:
         return {"config": cfg}
 
     serve = StreamServe(cfg)
+    if args.http:
+        from repro.gateway import run_gateway
+
+        if args.warmup:
+            print("warming up (pre-compiling shape buckets)...")
+            serve.engine.warmup()
+        run_gateway(serve, host=cfg.gateway_host, port=cfg.gateway_port)
+        return {"config": cfg, "serve": serve}
     rng = np.random.default_rng(cfg.seed)
     # shared prefix so the prefix cache (C_w signal) engages
     shared = rng.integers(0, serve.arch.vocab_size, 8).tolist()

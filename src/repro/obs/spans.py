@@ -25,25 +25,33 @@ from repro.obs.trace import EV_COUNTERS, EV_DECODE_STEP
 
 def compute_phases(
     arrival: Optional[float],
-    t_prefill_start: float,
-    t_prefill_end: float,
-    t_first_token: float,
-    t_end: float,
+    t_prefill_start: Optional[float],
+    t_prefill_end: Optional[float],
+    t_first_token: Optional[float],
+    t_end: Optional[float],
     prefill_active_ticks: int = 0,
 ) -> Tuple[float, float, float, float]:
     """(queued, prefill, decode, stalls) summing exactly to t_end - arrival.
 
-    Timestamp conventions (engine ticks start at 1.0, so 0.0 == "never"):
-    the bucketed/paged admit path stamps start == end == first_token at the
-    admission tick; the chunked path stamps start at the first chunk and
-    end/first_token at completion, with ``prefill_active_ticks`` counting the
-    lane turns actually granted (the first granted turn lands on the start
-    tick itself, so active service spans ``active - 1`` ticks past start —
-    the rest of the start->end window is preemption stall).
+    Timestamp conventions: ``None`` == "never happened" — any numeric value,
+    INCLUDING 0.0, is a real stamp (tick-0 service is legitimate; a falsy
+    guard here used to misattribute it).  The bucketed/paged admit path
+    stamps start == end == first_token at the admission tick; the chunked
+    path stamps start at the first chunk and end/first_token at completion,
+    with ``prefill_active_ticks`` counting the lane turns actually granted
+    (the first granted turn lands on the start tick itself, so active
+    service spans ``active - 1`` ticks past start — the rest of the
+    start->end window is preemption stall).
+
+    Legacy callers that still pass the old 0.0-as-never sentinels keep the
+    sum identity: a 0.0 stamp clamps into ``[arrival, t_end]`` like any
+    other early stamp.
     """
-    t0 = arrival or 0.0
+    t0 = arrival if arrival is not None else 0.0
+    if t_end is None:        # not terminal yet: nothing to attribute
+        return 0.0, 0.0, 0.0, 0.0
     latency = max(t_end - t0, 0.0)
-    if t_prefill_start <= 0.0:
+    if t_prefill_start is None:
         # never reached the prefill lane (shed / failed / cancelled queued)
         return latency, 0.0, 0.0, 0.0
     # clamp stamps into [arrival, end]: tests and replay traces may carry a
@@ -51,17 +59,17 @@ def compute_phases(
     # nominal arrival tick), and latency is defined against that arrival —
     # service before t0 attributes as zero, keeping the sum identity exact
     ps = min(max(t_prefill_start, t0), t_end)
-    pe = min(max(t_prefill_end, t0), t_end) if t_prefill_end > 0.0 else 0.0
-    ft = min(max(t_first_token, t0), t_end) if t_first_token > 0.0 else 0.0
+    pe = min(max(t_prefill_end, t0), t_end) if t_prefill_end is not None else None
+    ft = min(max(t_first_token, t0), t_end) if t_first_token is not None else None
     t_prefill_start, t_prefill_end, t_first_token = ps, pe, ft
     queued = max(t_prefill_start - t0, 0.0)
-    window_end = t_prefill_end if t_prefill_end > 0.0 else t_end
+    window_end = t_prefill_end if t_prefill_end is not None else t_end
     window = max(window_end - t_prefill_start, 0.0)
     if prefill_active_ticks > 0:
         prefill = min(float(prefill_active_ticks - 1), window)
     else:
         prefill = window  # one-shot admission: the whole window is service
-    decode = max(t_end - t_first_token, 0.0) if t_first_token > 0.0 else 0.0
+    decode = max(t_end - t_first_token, 0.0) if t_first_token is not None else 0.0
     # exact residual keeps the sum identity; clamped at 0 defensively (the
     # engine's stamp ordering guarantees non-negative residuals)
     stalls = max(latency - queued - prefill - decode, 0.0)

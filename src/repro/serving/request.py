@@ -47,10 +47,13 @@ class Request:
     worker_id: int = -1
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     token_times: List[float] = dataclasses.field(default_factory=list)
-    t_prefill_start: float = 0.0
-    t_prefill_end: float = 0.0
-    t_first_token: float = 0.0
-    t_end: float = 0.0
+    # lifecycle stamps: None = "never happened".  0.0 is a REAL stamp (engine
+    # tick 0 / simulator t=0) — consumers must guard with `is not None`, never
+    # truthiness (a falsy check reported tick-0 first tokens as "no TTFT")
+    t_prefill_start: Optional[float] = None
+    t_prefill_end: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_end: Optional[float] = None
     error: Optional[str] = None
     # provenance for prefix caching
     cache_hit_tokens: int = 0

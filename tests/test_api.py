@@ -208,3 +208,76 @@ def test_worker_stats_shape(serve):
     stats = serve.worker_stats()
     assert [w["worker_id"] for w in stats] == [0, 1]
     assert all(0.0 <= w["acceptance"] <= 1.0 for w in stats)
+
+
+def test_worker_stats_degrades_on_missing_monitor_row(serve):
+    """A pair whose monitor row vanished (e.g. stats scraped mid-recovery)
+    must degrade to an unhealthy placeholder row, not KeyError the whole
+    observability endpoint."""
+    row = serve.monitor.workers.pop(0)
+    try:
+        stats = serve.worker_stats()
+    finally:
+        serve.monitor.workers[0] = row
+    assert [w["worker_id"] for w in stats] == [0, 1]
+    degraded = stats[0]
+    assert degraded["healthy"] is False
+    assert degraded["acceptance"] == 0.0 and degraded["queue_depth"] == 0
+    assert degraded["spec_depth"] is None
+    # the healthy pair's row is untouched
+    assert stats[1]["healthy"] in (True, False)  # real monitor-backed value
+
+
+# ------------------------------------------------- terminal-state regressions
+def _handle_over(req):
+    from repro.api.frontend import RequestHandle
+
+    return RequestHandle(None, req)
+
+
+def test_slo_tick0_stamps_are_real_measurements():
+    """Falsy-timestamp regression: a first token / completion stamped at
+    engine tick 0 is a REAL measurement.  slo() must report 0.0, never
+    collapse it to None via truthiness."""
+    from repro.serving.request import Request
+
+    req = Request(prompt=[1, 2, 3], arrival_time=0.0)
+    req.t_first_token = 0.0
+    req.t_end = 0.0
+    req.output_tokens = [7]
+    req.state = RequestState.FINISHED
+    slo = _handle_over(req).slo()
+    assert slo["ttft"] == 0.0 and slo["ttft"] is not None
+    assert slo["latency"] == 0.0 and slo["latency"] is not None
+    # and None still means "never happened", not 0
+    fresh = Request(prompt=[1, 2, 3], arrival_time=0.0)
+    slo = _handle_over(fresh).slo()
+    assert slo["ttft"] is None and slo["latency"] is None
+
+
+def test_failed_request_raises_typed_error():
+    """stream()/result() on a FAILED request must raise RequestFailedError
+    (carrying the engine's reason + partial output) after yielding whatever
+    was emitted — a partial transcript can no longer pass as success."""
+    from repro.api import RequestFailedError
+    from repro.serving.request import Request
+
+    req = Request(prompt=[1, 2, 3])
+    req.output_tokens = [11, 12]
+    req.state = RequestState.FAILED
+    req.error = "no_healthy_workers"
+    h = _handle_over(req)
+    seen = []
+    with pytest.raises(RequestFailedError) as exc:
+        for tok in h.stream():
+            seen.append(tok)
+    assert seen == [11, 12]
+    assert exc.value.error == "no_healthy_workers"
+    assert exc.value.partial_tokens == [11, 12]
+    assert exc.value.request_id == req.request_id
+    with pytest.raises(RequestFailedError):
+        h.result()
+    # cancellation (the caller's own action) still ends the stream quietly
+    req2 = Request(prompt=[1])
+    req2.state = RequestState.CANCELLED
+    assert list(_handle_over(req2).stream()) == []

@@ -1,0 +1,332 @@
+"""HTTP gateway tests: real sockets against the full StreamServe stack.
+
+A module-scoped :class:`GatewayThread` hosts the engine + asyncio gateway on
+a dedicated thread; every test drives it over genuine localhost TCP with the
+stdlib clients from :mod:`repro.gateway.client`.  Engine state is only ever
+inspected through ``GatewayThread.call`` (runs on the engine's event loop)
+so the tests never race the step driver.
+
+``pytest -m chaos`` adds the fault drill: a worker killed over the admin
+endpoint while streaming clients are live on the wire.
+"""
+import asyncio
+import concurrent.futures
+import re
+import time
+from time import perf_counter
+
+import jax
+import pytest
+
+from repro.api import ServeConfig, StreamServe
+from repro.distributed.sharding import unzip_params
+from repro.gateway import GatewayThread
+from repro.gateway.client import (
+    SSEClient,
+    asse_collect,
+    completion_body,
+    http_request,
+)
+from repro.models import build_model
+
+PROMPT = list(range(2, 12))
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = ServeConfig.reduced_smoke("qwen3-1.7b", n_pairs=2, max_batch=2)
+    model = build_model(cfg.build_arch_config())
+    params, _ = unzip_params(model.init(jax.random.PRNGKey(0)))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gw(model_params):
+    cfg, params = model_params
+    serve = StreamServe(cfg, params=params)
+    thread = GatewayThread(serve, port=0, max_pending=32)
+    host, port = thread.start()
+    yield {"thread": thread, "serve": serve, "host": host, "port": port}
+    thread.stop()
+
+
+def _drain(gw, timeout: float = 60.0) -> None:
+    """Wait until the engine has no in-flight work (engine-loop snapshot)."""
+    deadline = perf_counter() + timeout
+    while perf_counter() < deadline:
+        pending = gw["thread"].call(lambda: gw["serve"].pending)
+        if pending == 0:
+            return
+        time.sleep(0.05)
+    raise TimeoutError("engine did not drain")
+
+
+# ------------------------------------------------------------------ liveness
+def test_healthz(gw):
+    status, _, body = http_request(gw["host"], gw["port"], "GET", "/healthz")
+    import json
+
+    payload = json.loads(body)
+    assert status == 200 and payload["status"] == "ok"
+    assert len(payload["workers"]) == 2
+    assert all(w["healthy"] for w in payload["workers"])
+
+
+def test_unknown_routes_and_methods(gw):
+    host, port = gw["host"], gw["port"]
+    status, _, _ = http_request(host, port, "GET", "/nope")
+    assert status == 404
+    status, _, _ = http_request(host, port, "GET", "/v1/completions")
+    assert status == 405
+    status, _, _ = http_request(host, port, "POST", "/v1/completions",
+                                body=b"{not json")
+    assert status == 400
+    status, _, _ = http_request(host, port, "POST", "/v1/completions",
+                                body={"prompt": []})
+    assert status == 400
+    status, _, _ = http_request(host, port, "POST", "/v1/cancel/req-nope")
+    assert status == 404
+
+
+# --------------------------------------------------------------- completions
+def test_non_streaming_completion(gw):
+    import json
+
+    status, _, body = http_request(
+        gw["host"], gw["port"], "POST", "/v1/completions",
+        body=completion_body(PROMPT, 4, stream=False),
+    )
+    payload = json.loads(body)
+    assert status == 200
+    choice = payload["choices"][0]
+    assert len(choice["token_ids"]) == 4 and choice["finish_reason"] == "length"
+    assert payload["usage"] == {"prompt_tokens": len(PROMPT),
+                                "completion_tokens": 4, "total_tokens": len(PROMPT) + 4}
+    assert payload["slo"]["state"] == "finished"
+    _drain(gw)
+
+
+def test_string_prompt_byte_tokenized(gw):
+    import json
+
+    status, _, body = http_request(
+        gw["host"], gw["port"], "POST", "/v1/completions",
+        body={"prompt": "hello stream", "max_tokens": 3, "stream": False},
+    )
+    payload = json.loads(body)
+    assert status == 200
+    assert payload["usage"]["completion_tokens"] == 3
+    assert isinstance(payload["choices"][0]["text"], str)
+    _drain(gw)
+
+
+def test_streaming_sse_frames(gw):
+    with SSEClient(gw["host"], gw["port"], "/v1/completions",
+                   completion_body(PROMPT, 5)) as client:
+        assert client.status == 200
+        assert client.headers["content-type"] == "text/event-stream"
+        frames = list(client.events())
+    token_frames = [f for f in frames if "usage" not in f and "error" not in f]
+    terminals = [f for f in frames if "usage" in f or "error" in f]
+    assert len(token_frames) == 5
+    assert len(terminals) == 1, "exactly one terminal frame before [DONE]"
+    assert terminals[0]["choices"][0]["finish_reason"] == "length"
+    assert terminals[0]["usage"]["completion_tokens"] == 5
+    _drain(gw)
+
+
+def test_concurrent_sse_streams_interleave(gw):
+    """8 clients on 4 decode slots: every stream completes, and streams
+    genuinely overlap in time (continuous batching over HTTP, not serial
+    request turns)."""
+    n, toks = 8, 4
+
+    async def fan_out():
+        return await asyncio.gather(*[
+            asse_collect(gw["host"], gw["port"], "/v1/completions",
+                         completion_body(PROMPT[:6] + [20 + i], toks))
+            for i in range(n)
+        ])
+
+    results = asyncio.run(fan_out())
+    assert all(r["status"] == 200 for r in results)
+    assert all(len(r["frames"]) == toks for r in results)
+    assert all("usage" in (r["terminal"] or {}) for r in results)
+    # interval-overlap check: at least two streams were live simultaneously
+    spans = [(r["t_first"], r["t_last"]) for r in results]
+    overlapping = any(
+        a0 < b1 and b0 < a1
+        for i, (a0, a1) in enumerate(spans)
+        for (b0, b1) in spans[i + 1:]
+    )
+    assert overlapping, "streams never overlapped — requests served serially"
+    _drain(gw)
+
+
+# ----------------------------------------------------- disconnect + capacity
+def test_disconnect_mid_stream_cancels_and_frees_kv(gw):
+    """Dropping the socket mid-stream must cancel the request and give back
+    its decode slot and KV pages — abandoned streams may not leak."""
+    thread, serve = gw["thread"], gw["serve"]
+    _drain(gw)
+    baseline = thread.call(
+        lambda: [(p.kv.free_blocks, len(p.free_slots())) for p in serve.engine.pairs]
+    )
+    client = SSEClient(gw["host"], gw["port"], "/v1/completions",
+                       completion_body(PROMPT, 60))
+    events = client.events()
+    first = next(events)
+    rid = first["id"]
+    client.close()                      # vanish mid-stream, no cancel call
+
+    deadline = perf_counter() + 30.0
+    while perf_counter() < deadline:
+        rec = thread.call(
+            lambda: next((r for r in serve.monitor.completed
+                          if r.request_id == rid), None)
+        )
+        if rec is not None and rec.cancelled:
+            break
+        time.sleep(0.05)
+    else:
+        raise AssertionError("disconnect did not cancel the request")
+    _drain(gw)
+    after = thread.call(
+        lambda: [(p.kv.free_blocks, len(p.free_slots())) for p in serve.engine.pairs]
+    )
+    assert after == baseline, f"leaked KV/slots: {baseline} -> {after}"
+
+
+def test_backpressure_429(gw):
+    """Past the pending watermark the gateway sheds at the door with 429 +
+    Retry-After instead of queueing without bound."""
+    import json
+
+    thread = gw["thread"]
+    _drain(gw)
+    thread.call(setattr, gw["thread"].gateway, "max_pending", 1)
+    try:
+        with SSEClient(gw["host"], gw["port"], "/v1/completions",
+                       completion_body(PROMPT, 30)) as client:
+            next(client.events())       # admitted and decoding -> pending >= 1
+            status, headers, body = http_request(
+                gw["host"], gw["port"], "POST", "/v1/completions",
+                body=completion_body(PROMPT, 4),
+            )
+            payload = json.loads(body)
+            assert status == 429
+            assert headers["retry-after"] == "1"
+            assert payload["error"]["type"] == "overloaded"
+            rejected = thread.call(lambda: thread.gateway.rejected_429)
+            assert rejected >= 1
+    finally:
+        thread.call(setattr, thread.gateway, "max_pending", 32)
+    _drain(gw)
+
+
+def test_cancel_endpoint_closes_stream(gw):
+    import json
+
+    client = SSEClient(gw["host"], gw["port"], "/v1/completions",
+                       completion_body(PROMPT, 60))
+    events = client.events()
+    rid = next(events)["id"]
+    status, _, body = http_request(gw["host"], gw["port"], "POST",
+                                   f"/v1/cancel/{rid}")
+    assert status == 200 and json.loads(body)["cancelled"] is True
+    frames = list(events)               # stream must terminate on its own
+    terminal = frames[-1]
+    assert terminal["choices"][0]["finish_reason"] == "cancelled"
+    client.close()
+    _drain(gw)
+
+
+# ----------------------------------------------------------------- /metrics
+def test_metrics_prometheus_exposition(gw):
+    status, headers, body = http_request(gw["host"], gw["port"], "GET",
+                                         "/metrics")
+    assert status == 200
+    assert headers["content-type"] == "text/plain; version=0.0.4; charset=utf-8"
+    text = body.decode("utf-8")
+    sample = re.compile(
+        r"^[A-Za-z_:][A-Za-z0-9_:]*(\{[^}]*\})?\s+"
+        r"([-+]?(\d+(\.\d*)?([eE][-+]?\d+)?|\.\d+)|[-+]?Inf|NaN)$"
+    )
+    names = set()
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        m = sample.match(line)
+        assert m, f"unparseable Prometheus sample line: {line!r}"
+        names.add(line.split("{")[0].split()[0])
+    assert names, "metrics exposition contained no samples"
+    assert any(n.startswith("streamserve_") for n in sorted(names))
+
+
+# ------------------------------------------------------------- tick-0 stamps
+def test_tick0_cancel_latency_is_zero(model_params):
+    """Regression for the falsy-timestamp bug: a request that reaches
+    terminal at engine tick 0 has latency 0.0 — a real measurement — not
+    None/missing.  Fresh engine so the clock really is at 0."""
+    cfg, params = model_params
+    serve = StreamServe(cfg.replace(n_pairs=1, max_batch=1), params=params)
+    h = serve.submit(PROMPT)
+    assert h.request.arrival_time == 0.0
+    assert h.cancel()
+    slo = h.slo()
+    assert slo["latency"] == 0.0 and slo["latency"] is not None
+    assert h.request.t_end == 0.0
+
+
+# -------------------------------------------------------------- chaos drill
+@pytest.mark.chaos
+def test_worker_killed_under_live_http_load(model_params):
+    """Kill stream pair 0 over the admin endpoint while streaming clients
+    are live on real sockets: every client must still observe EXACTLY ONE
+    terminal event (finish or failure — never a hang, never a duplicate),
+    and the monitor must hold one terminal record per request."""
+    cfg, params = model_params
+    serve = StreamServe(cfg, params=params)
+    thread = GatewayThread(serve, port=0, max_pending=64)
+    host, port = thread.start()
+    n, toks = 10, 8
+
+    def one_client(i):
+        with SSEClient(host, port, "/v1/completions",
+                       completion_body(PROMPT[:6] + [30 + i], toks),
+                       timeout=180.0) as c:
+            return list(c.events())
+
+    try:
+        with concurrent.futures.ThreadPoolExecutor(max_workers=n) as pool:
+            futures = [pool.submit(one_client, i) for i in range(n)]
+            time.sleep(0.3)             # let streams go live, then pull a pair
+            status, _, _ = http_request(host, port, "POST",
+                                        "/admin/fail_worker/0")
+            assert status == 200
+            transcripts = [f.result(timeout=180.0) for f in futures]
+
+        for frames in transcripts:
+            terminals = [f for f in frames if "usage" in f or "error" in f]
+            assert len(terminals) == 1, (
+                f"expected exactly one terminal event, got {len(terminals)}"
+            )
+        # at least the clients routed to the surviving pair finish clean
+        finished = sum(1 for t in transcripts
+                       if any("usage" in f for f in t))
+        assert finished >= 1
+
+        import json
+
+        status, _, body = http_request(host, port, "GET", "/healthz")
+        payload = json.loads(body)
+        assert status == 200 and payload["status"] == "ok"
+        health = {w["worker_id"]: w["healthy"] for w in payload["workers"]}
+        assert health[0] is False and health[1] is True
+
+        records = thread.call(
+            lambda: [r.request_id for r in serve.monitor.completed]
+        )
+        assert len(records) == len(set(records)), "duplicate terminal records"
+    finally:
+        thread.stop()
