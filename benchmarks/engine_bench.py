@@ -313,7 +313,7 @@ def main(argv=None) -> int:
         chunked[f"long_ttft_ticks_{label}"] = longs[0] if longs else None
         if preempt:
             # the chunked contract: ONE compiled prefill program total
-            chunked["prefill_traces"] = ceng.jit_cache_sizes()["pair0.chunk_prefill"]
+            chunked["prefill_traces"] = ceng.jit_cache_sizes()["chunk_prefill"]
         print(f"  {label:12s} short TTFT p99 {shorts:5.1f} ticks  "
               f"long TTFT {chunked[f'long_ttft_ticks_{label}']}  "
               f"retraces {results[f'chunked_{label}']['retraces_steady']}")

@@ -128,6 +128,50 @@ def _paged_admit_step(chunk_prefill, params, cache, bt, tokens, lens, n_new):
     return last, cache
 
 
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _lane_decode(decode_step, params, cache, tokens):
+    """One decode step over the donated lane cache.
+
+    ``decode_step`` (static — the lane model's closure) keys the jit cache,
+    so the wrapper lives at module level: N lanes share ONE jit object whose
+    cache holds one entry per (model, shape) instead of compiling a fresh
+    wrapper per :class:`ModelLane` (the old FL102 per-instance-jit pattern).
+    """
+    return decode_step(params, cache, tokens)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _lane_commit(commit_cache, cache, n_new, accept_idx):
+    """Speculative rollback of the donated lane cache.
+
+    The pre-step length is recovered INSIDE the jit so callers never hold a
+    reference into a donated cache (it would be a deleted buffer).
+    """
+    old_len = cache["len"] - n_new
+    return commit_cache(cache, old_len, accept_idx)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _lane_prefill(prefill, params, max_len, batch):
+    """Bucketed one-shot prefill (static model closure + max_len)."""
+    return prefill(params, batch, max_len=max_len)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _chunk_step(chunk_prefill, cache, params, tokens, lens, n_new, row, last_idx):
+    """One fixed-size chunked-prefill step + last-token logit gather.
+
+    ``chunk_prefill`` (static) ingests row ``row``'s ``n_new`` suffix tokens;
+    the in-jit dynamic slice pulls that row's last real logit so the caller
+    samples without a second device round-trip.
+    """
+    logits, cache = chunk_prefill(params, cache, tokens, lens, n_new)
+    last = jax.lax.dynamic_slice(
+        logits, (row, last_idx, 0), (1, 1, logits.shape[-1])
+    )[:, 0]
+    return last, cache
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _cache_set_bt(cache, bt):
     """Install the host-assembled block tables into the donated decode cache
@@ -226,11 +270,6 @@ class ModelLane:
         self.kv_block_size = kv_block_size
         self.max_context = (max_context or max_len) if paged else max_len
         self.cache = self._init_cache()
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
-        self._commit = jax.jit(self._commit_fn, donate_argnums=(0,))
-        self._prefill = jax.jit(
-            functools.partial(self.model.prefill, max_len=max_len)
-        )
 
     def _init_cache(self):
         if self.paged:
@@ -240,26 +279,24 @@ class ModelLane:
             )
         return self.model.init_cache(self.max_batch, self.max_len)
 
-    def _commit_fn(self, cache, n_new, accept_idx):
-        # the pre-step length is recovered INSIDE the jit so callers never
-        # hold a reference into a donated cache (it would be a deleted buffer)
-        old_len = cache["len"] - n_new
-        return self.model.commit_cache(cache, old_len, accept_idx)
-
     def prefill(self, batch: Dict[str, Any]):
-        return self._prefill(self.params, batch)
+        return _lane_prefill(self.model.prefill, self.params, self.max_len, batch)
 
     def insert_rows(self, slots: jax.Array, small_cache) -> None:
         """Transfer prefill rows into decode slots (row r -> slots[r])."""
         self.cache = _tree_insert_rows(self.cache, small_cache, slots)
 
     def decode(self, tokens: jax.Array):
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        logits, self.cache = _lane_decode(
+            self.model.decode_step, self.params, self.cache, tokens
+        )
         return logits
 
     def commit(self, n_new: int, accept_idx: jax.Array) -> None:
         """Roll back the last ``n_new`` ingested tokens to ``accept_idx``."""
-        self.cache = self._commit(self.cache, n_new, accept_idx)
+        self.cache = _lane_commit(
+            self.model.commit_cache, self.cache, n_new, accept_idx
+        )
 
     def reset_cache(self) -> None:
         self.cache = self._init_cache()
@@ -467,16 +504,6 @@ class StreamPair:
             # last request granted a chunk — preempt/resume trace detection
             self._chunk_last: Optional[str] = None
             self.chunk_cache = self.lane.model.init_cache(n_rows, econf.max_len)
-            model = self.lane.model
-
-            def _chunk_step(cache, params, tokens, lens, n_new, row, last_idx):
-                logits, cache = model.chunk_prefill(params, cache, tokens, lens, n_new)
-                last = jax.lax.dynamic_slice(
-                    logits, (row, last_idx, 0), (1, 1, logits.shape[-1])
-                )[:, 0]
-                return last, cache
-
-            self._chunk_jit = jax.jit(_chunk_step, donate_argnums=(0,))
         # slot state -----------------------------------------------------------
         self.slot_req: List[Optional[Request]] = [None] * econf.max_batch
         # device-resident pending next-token per slot (sampled, not ingested)
@@ -805,8 +832,8 @@ class StreamPair:
                 lens[r] = self.chunk_cursor[rq.request_id]
         n_new = np.zeros((R,), np.int32)
         n_new[row] = n
-        last_logits, self.chunk_cache = self._chunk_jit(
-            self.chunk_cache, self.lane.params,
+        last_logits, self.chunk_cache = _chunk_step(
+            self.lane.model.chunk_prefill, self.chunk_cache, self.lane.params,
             jnp.asarray(tokens), jnp.asarray(lens), jnp.asarray(n_new),
             np.int32(row), np.int32(max(n - 1, 0)),
         )
@@ -1151,8 +1178,9 @@ class StreamPair:
             # the completion path (chunk-row insert + single-row sample)
             R, C = len(self.chunk_rows), self._chunk
             zeros = jnp.zeros((R,), jnp.int32)
-            last, self.chunk_cache = self._chunk_jit(
-                self.chunk_cache, self.lane.params,
+            last, self.chunk_cache = _chunk_step(
+                self.lane.model.chunk_prefill, self.chunk_cache,
+                self.lane.params,
                 jnp.zeros((R, C), jnp.int32), zeros, zeros,
                 np.int32(0), np.int32(0),
             )
@@ -1330,6 +1358,9 @@ class PipeServeEngine:
         elif isinstance(router, str):
             router = resolve_router(router, config=self.econf.router_config)
         self._now = 0.0
+        # retrace accounting is relative to construction: the lane jit caches
+        # are module-level, so earlier engines' traces must not count here
+        self._jit_base = self._module_jit_sizes()
         self.monitor = PerformanceMonitor(n_pairs, clock=self._clock)
         self.trace = make_recorder(self.econf.trace, self.econf.trace_capacity)
         self.flight_dumps: List[Dict[str, Any]] = []
@@ -1605,12 +1636,14 @@ class PipeServeEngine:
             pair.warmup(max_prompt_len) for pair in self.pairs if pair.healthy
         )
 
-    def jit_cache_sizes(self) -> Dict[str, int]:
-        """Compiled-trace counts of every hot-path callable — the retrace
-        observability consumed by engine_bench and the regression tests."""
+    @staticmethod
+    def _module_jit_sizes() -> Dict[str, int]:
+        """Raw compiled-trace counts of the module-level hot-path jits
+        (process-global: every engine's lanes share these caches, keyed by
+        each lane's static model closure)."""
         from repro.serving import sampling, speculative
 
-        sizes = {
+        return {
             "tree_insert": _tree_insert_rows._cache_size(),
             "paged_admit": _paged_admit_step._cache_size(),
             "set_bt": _cache_set_bt._cache_size(),
@@ -1618,24 +1651,28 @@ class PipeServeEngine:
             "verify_tokens": speculative.verify_tokens._cache_size(),
             "sample": sampling.sample._cache_size(),
             "sample_probs": sampling.sample_probs._cache_size(),
+            "lane_prefill": _lane_prefill._cache_size(),
+            "lane_decode": _lane_decode._cache_size(),
+            "lane_commit": _lane_commit._cache_size(),
+            "chunk_prefill": _chunk_step._cache_size(),
         }
-        for pair in self.pairs:
-            lanes = [("", pair.lane)]
-            draft_lane = getattr(pair.draft, "lane", None)
-            if isinstance(draft_lane, ModelLane):
-                lanes.append(("draft_", draft_lane))
-            for prefix, lane in lanes:
-                tag = f"pair{pair.worker_id}.{prefix}"
-                sizes[tag + "prefill"] = lane._prefill._cache_size()
-                sizes[tag + "decode"] = lane._decode._cache_size()
-                sizes[tag + "commit"] = lane._commit._cache_size()
-            if pair._chunk is not None:
-                # the chunked-prefill contract: exactly ONE compiled prefill
-                # program regardless of prompt length
-                sizes[f"pair{pair.worker_id}.chunk_prefill"] = (
-                    pair._chunk_jit._cache_size()
-                )
-        return sizes
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Compiled-trace counts attributable to THIS engine — the retrace
+        observability consumed by engine_bench and the regression tests.
+
+        The lane jits are module-level (static model closure keys the cache),
+        so counts are reported relative to the snapshot taken at engine
+        construction; traces left behind by earlier engines in the same
+        process don't bleed in.  The chunked-prefill contract becomes:
+        ``chunk_prefill`` == number of chunked lanes (ONE program per lane
+        regardless of prompt length).
+        """
+        base = self._jit_base
+        return {
+            name: count - base.get(name, 0)
+            for name, count in self._module_jit_sizes().items()
+        }
 
     def jit_cache_total(self) -> int:
         return sum(self.jit_cache_sizes().values())

@@ -57,7 +57,10 @@ def edf_deadline(req: Request) -> float:
     """
     if req.slo_ttft is None:
         return math.inf
-    return (req.arrival_time or 0.0) + req.slo_ttft
+    # tick-0 arrivals are real measurements: guard with `is not None`,
+    # never truthiness (flowlint FL604)
+    arrival = req.arrival_time if req.arrival_time is not None else 0.0
+    return arrival + req.slo_ttft
 
 
 class StreamScheduler:

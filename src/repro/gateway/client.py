@@ -8,9 +8,10 @@ Two flavours over the same wire format:
   benchmark, where hundreds of concurrent streaming connections live on one
   event loop and every frame is timestamped with ``perf_counter``.
 
-Both speak exactly what :mod:`repro.gateway.http` serves: HTTP/1.1, one
-request per connection, ``Connection: close``, SSE frames as ``data:``
-lines separated by blank lines, terminated by ``data: [DONE]``.
+Both speak exactly what :mod:`repro.gateway.http` serves: HTTP/1.1 with
+``Connection: close`` by default (:class:`KeepAliveClient` opts into
+connection reuse for non-SSE requests), SSE frames as ``data:`` lines
+separated by blank lines, terminated by ``data: [DONE]``.
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 
 def _encode_request(method: str, path: str, host: str,
-                    body: Optional[Any]) -> bytes:
+                    body: Optional[Any],
+                    connection: str = "close") -> bytes:
     payload = b""
     if body is not None:
         payload = body if isinstance(body, bytes) else json.dumps(body).encode()
@@ -30,7 +32,7 @@ def _encode_request(method: str, path: str, host: str,
             f"Host: {host}\r\n"
             f"Content-Length: {len(payload)}\r\n"
             f"Content-Type: application/json\r\n"
-            f"Connection: close\r\n\r\n")
+            f"Connection: {connection}\r\n\r\n")
     return head.encode("latin-1") + payload
 
 
@@ -67,6 +69,61 @@ def http_request(host: str, port: int, method: str, path: str,
                 break
             rest += chunk
         return status, headers, rest if want < 0 else rest[:want]
+
+
+class KeepAliveClient:
+    """Blocking client that reuses ONE socket across buffered requests.
+
+    Sends ``Connection: keep-alive`` and reads each response by its
+    ``Content-Length`` so the socket stays positioned at the next response
+    head.  ``closed`` flips when the server announces ``Connection: close``
+    (per-connection request bound hit) — callers reconnect then.  Not for
+    SSE: streams always own their connection until EOF.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self.host = host
+        self.port = port
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.closed = False
+        self._buf = b""
+
+    def request(self, method: str, path: str, body: Optional[Any] = None
+                ) -> Tuple[int, Dict[str, str], bytes]:
+        if self.closed:
+            raise ConnectionError("keep-alive connection already closed")
+        self.sock.sendall(_encode_request(method, path, self.host, body,
+                                          connection="keep-alive"))
+        while b"\r\n\r\n" not in self._buf:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed the keep-alive socket")
+            self._buf += chunk
+        head, _, self._buf = self._buf.partition(b"\r\n\r\n")
+        status, headers = _parse_head(head)
+        want = int(headers.get("content-length", "0") or "0")
+        while len(self._buf) < want:
+            chunk = self.sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed mid-body")
+            self._buf += chunk
+        payload, self._buf = self._buf[:want], self._buf[want:]
+        if headers.get("connection", "").lower() == "close":
+            self.closed = True
+        return status, headers, payload
+
+    def close(self) -> None:
+        self.closed = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "KeepAliveClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class SSEClient:

@@ -1,9 +1,12 @@
 """Minimal asyncio HTTP/1.1 server with SSE streaming — stdlib only.
 
 The container image carries no aiohttp/uvicorn, so the gateway speaks just
-enough HTTP/1.1 itself: request-line + headers + Content-Length bodies in,
-``Connection: close`` responses out (one request per connection — the load
-profile is hundreds of short-lived streaming clients, not keep-alive reuse).
+enough HTTP/1.1 itself: request-line + headers + Content-Length bodies in.
+Non-SSE requests that send ``Connection: keep-alive`` may reuse the
+connection (bounded at :data:`MAX_KEEPALIVE_REQUESTS` per socket, with a
+:data:`KEEPALIVE_IDLE_S` idle timeout between requests); everything else —
+and every SSE stream, which owns its connection until EOF — is answered
+``Connection: close``.
 
 Two response shapes:
 
@@ -28,6 +31,13 @@ from urllib.parse import parse_qsl, urlsplit
 
 MAX_BODY = 8 * 1024 * 1024      # request-body cap (tokenised prompts are small)
 MAX_HEADER_LINE = 16 * 1024
+
+# keep-alive bounds: a connection is reused only for clients that ask for it
+# (Connection: keep-alive on a non-SSE request), for at most this many
+# requests, and is dropped after this much idle time between requests — an
+# abandoned-but-open socket must not pin server state forever
+MAX_KEEPALIVE_REQUESTS = 32
+KEEPALIVE_IDLE_S = 5.0
 
 STATUS_PHRASES = {
     200: "OK", 202: "Accepted", 400: "Bad Request", 404: "Not Found",
@@ -109,7 +119,7 @@ Handler = Callable[[HTTPRequest], Any]   # -> HTTPResponse | SSEResponse
 
 
 class AsyncHTTPServer:
-    """One-request-per-connection HTTP/1.1 server over asyncio streams."""
+    """HTTP/1.1 server over asyncio streams (opt-in keep-alive, SSE close)."""
 
     def __init__(self, handler: Handler, host: str = "127.0.0.1",
                  port: int = 0):
@@ -135,19 +145,37 @@ class AsyncHTTPServer:
     async def _serve_connection(self, reader: asyncio.StreamReader,
                                 writer: asyncio.StreamWriter) -> None:
         try:
-            request = await self._read_request(reader)
-            if request is None:
-                return
-            try:
-                response = await self.handler(request)
-            except ValueError as e:       # handler-level validation error
-                response = HTTPResponse.error(400, str(e))
-            except Exception as e:        # never kill the accept loop
-                response = HTTPResponse.error(500, f"{type(e).__name__}: {e}")
-            if isinstance(response, SSEResponse):
-                await self._write_sse(response, reader, writer)
-            else:
-                await self._write_response(response, writer)
+            for served in range(MAX_KEEPALIVE_REQUESTS):
+                if served == 0:
+                    request = await self._read_request(reader)
+                else:
+                    # between keep-alive requests: bounded idle wait
+                    try:
+                        request = await asyncio.wait_for(
+                            self._read_request(reader), KEEPALIVE_IDLE_S
+                        )
+                    except asyncio.TimeoutError:
+                        break
+                if request is None:
+                    break
+                try:
+                    response = await self.handler(request)
+                except ValueError as e:   # handler-level validation error
+                    response = HTTPResponse.error(400, str(e))
+                except Exception as e:    # never kill the accept loop
+                    response = HTTPResponse.error(500, f"{type(e).__name__}: {e}")
+                if isinstance(response, SSEResponse):
+                    # streams own the connection until EOF: always close
+                    await self._write_sse(response, reader, writer)
+                    break
+                keep = (
+                    served + 1 < MAX_KEEPALIVE_REQUESTS
+                    and request.headers.get("connection", "").lower()
+                    == "keep-alive"
+                )
+                await self._write_response(response, writer, keep_alive=keep)
+                if not keep:
+                    break
         except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
             pass
         finally:
@@ -189,12 +217,18 @@ class AsyncHTTPServer:
         )
 
     async def _write_response(self, resp: HTTPResponse,
-                              writer: asyncio.StreamWriter) -> None:
+                              writer: asyncio.StreamWriter,
+                              keep_alive: bool = False) -> None:
         headers = {
             "Content-Length": str(len(resp.body)),
-            "Connection": "close",
+            "Connection": "keep-alive" if keep_alive else "close",
             **resp.headers,
         }
+        if keep_alive:
+            headers.setdefault(
+                "Keep-Alive",
+                f"timeout={int(KEEPALIVE_IDLE_S)}, max={MAX_KEEPALIVE_REQUESTS}",
+            )
         writer.write(self._head(resp.status, headers))
         writer.write(resp.body)
         await writer.drain()

@@ -125,7 +125,7 @@ def verify_reference(
 
     k = draft_tokens.shape[0]
     V = target_logits.shape[-1]
-    p_full = np.asarray(
+    p_full = jax.device_get(
         token_probs(jnp.asarray(target_logits), temperature, 0, 1.0)
     )
     rng = np.random.default_rng(seed)

@@ -42,8 +42,10 @@ def test_single_prefill_trace_regardless_of_length(engine_factory, tiny_model):
     ]
     _outputs(eng, reqs)
     sizes = eng.jit_cache_sizes()
-    assert sizes["pair0.chunk_prefill"] == 1
-    assert sizes["pair0.prefill"] == 0  # one-shot path never compiled
+    # one compiled chunk program per lane (the static model closure keys the
+    # module-level jit cache) regardless of prompt length
+    assert sizes["chunk_prefill"] == len(eng.pairs)
+    assert sizes["lane_prefill"] == 0  # one-shot path never compiled
 
 
 def test_zero_retraces_after_warmup(engine_factory, tiny_model):

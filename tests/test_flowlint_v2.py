@@ -1,0 +1,569 @@
+"""flowlint v2: interprocedural analysis + FL5/FL6 rule families.
+
+Covers the two-pass substrate (call graph, function summaries, fixed-point
+propagation), the async-discipline (FL5) and resource-lifecycle (FL6) rules
+with one true positive AND one true negative each, the two historical bug
+classes as seeded regression fixtures —
+
+* the pre-PR-9 falsy-timestamp pattern ``(req.arrival_time or 0.0)``
+  (FL604, the tick-0 cancel-latency bug),
+* a client-disconnect path that drops freshly allocated KV pages on an
+  early return (FL601, the leak PR 9 fixed by hand) —
+
+plus helper-spanning FL2/FL3 fixtures where the single-file view (the v1
+per-function analysis) is clean and only the project view raises the
+finding, the ``--format github`` / ``--diff BASE`` CLI surface, and a
+runtime-budget integration run on the repo itself.
+"""
+import ast
+import json
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.flowlint.cli import github_annotation
+from tools.flowlint.core import FileContext, Finding, analyze_project, analyze_source
+from tools.flowlint.diffs import parse_unified_diff
+from tools.flowlint.project import Project
+
+COLD = "src/repro/launch/fixture.py"      # no hot-path rules, not gateway
+HOT = "src/repro/serving/fixture.py"      # FL3 applies
+GATEWAY = "src/repro/gateway/fixture.py"  # FL5 applies
+HELPER = "src/repro/launch/helper_mod.py"
+
+
+def lint(src, path=COLD):
+    return analyze_source(path, textwrap.dedent(src))
+
+
+def rules(src, path=COLD):
+    return [f.rule for f in lint(src, path)]
+
+
+def lint_units(units):
+    return analyze_project([(p, textwrap.dedent(s)) for p, s in units])
+
+
+def project_of(units):
+    ctxs = []
+    for path, src in units:
+        src = textwrap.dedent(src)
+        ctxs.append(FileContext(path, src, ast.parse(src)))
+    return Project(ctxs)
+
+
+# ======================================================================
+# the two-pass substrate: call graph + summaries + propagation
+# ======================================================================
+
+def test_call_graph_resolves_bare_self_and_imported_calls():
+    proj = project_of([
+        (HELPER, """
+            import time
+            def helper():
+                time.sleep(1)
+        """),
+        (COLD, """
+            from repro.launch.helper_mod import helper
+            def local():
+                helper()
+            class Svc:
+                def work(self):
+                    self.inner()
+                def inner(self):
+                    local()
+        """),
+    ])
+    local = proj.functions["repro.launch.fixture.local"]
+    work = proj.functions["repro.launch.fixture.Svc.work"]
+    inner = proj.functions["repro.launch.fixture.Svc.inner"]
+    # bare import resolves cross-file; self.m() resolves within the class
+    assert [c.key for c in local.calls] == ["repro.launch.helper_mod.helper"]
+    assert [c.key for c in work.calls] == ["repro.launch.fixture.Svc.inner"]
+    assert work.calls[0].bound and not local.calls[0].bound
+    # the direct fact sits on helper; everyone upstream gets a witness
+    assert proj.functions["repro.launch.helper_mod.helper"].blocking
+    for info in (local, inner, work):
+        node, chain, op = info.blocks()
+        assert op == "time.sleep"
+    # the three-hop chain names every intermediate callee
+    _, chain, _ = work.blocks()
+    assert chain == ("repro.launch.fixture.Svc.inner",
+                     "repro.launch.fixture.local",
+                     "repro.launch.helper_mod.helper")
+
+
+def test_summaries_record_donated_and_synced_params():
+    proj = project_of([(COLD, """
+        import functools
+        import jax
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _commit(cache, n):
+            return cache
+        def commit_wrapper(buf, n):
+            return _commit(buf, n)
+        def to_host(x):
+            return float(x)
+        def sync_via_helper(y):
+            return to_host(y)
+    """)])
+    fns = proj.functions
+    # direct facts from pass 1 ...
+    assert fns["repro.launch.fixture.commit_wrapper"].donated_params == {0}
+    assert fns["repro.launch.fixture.to_host"].syncs_params == {0}
+    # ... and pass-2 backward propagation through the argument position
+    assert fns["repro.launch.fixture.sync_via_helper"].syncs_params == {0}
+
+
+def test_scheduled_coroutines_do_not_leak_facts_inline():
+    # create_task(self._drive()) marks _drive as the registered driver AND
+    # stops its facts flowing into the caller: the wrapper only schedules
+    proj = project_of([(GATEWAY, """
+        import asyncio
+        class Gw:
+            async def start(self):
+                asyncio.get_running_loop().create_task(self._drive())
+            async def _drive(self):
+                while True:
+                    self.serve.step()
+    """)])
+    drive = proj.functions["repro.gateway.fixture.Gw._drive"]
+    start = proj.functions["repro.gateway.fixture.Gw.start"]
+    assert drive.scheduled and drive.steps() is not None
+    assert start.steps() is None
+
+
+# ======================================================================
+# FL2/FL3 across function boundaries (tentpole acceptance fixtures)
+# ======================================================================
+
+HELPER_DONATES = """
+    import functools
+    import jax
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _commit(cache, n):
+        return cache
+    def commit_cache(cache, n):
+        return _commit(cache, n)
+"""
+
+CALLER_READS_AFTER = """
+    from repro.launch.helper_mod import commit_cache
+    def step(cache, n):
+        new = commit_cache(cache, n)
+        stale = cache.sum()
+        return new, stale
+"""
+
+
+def test_fl201_across_helper_boundary():
+    # the v1 per-function view: commit_cache is an opaque call, clean
+    assert rules(CALLER_READS_AFTER, path=COLD) == []
+    # the v2 project view: the donation two files away poisons `cache`
+    found = lint_units([(HELPER, HELPER_DONATES), (COLD, CALLER_READS_AFTER)])
+    assert [f.rule for f in found] == ["FL201"]
+    assert "donated" in found[0].message
+    # rebinding the donated name keeps the blessed idiom clean project-wide
+    ok = lint_units([(HELPER, HELPER_DONATES), (COLD, """
+        from repro.launch.helper_mod import commit_cache
+        def step(cache, n):
+            cache = commit_cache(cache, n)
+            return cache
+    """)])
+    assert [f.rule for f in ok] == []
+
+
+HELPER_SYNCS = """
+    def to_host(x):
+        return float(x)
+"""
+
+HOT_FEEDS_DEVICE = """
+    import jax.numpy as jnp
+    from repro.launch.helper_mod import to_host
+    def f(x):
+        y = jnp.exp(x)
+        return to_host(y)
+"""
+
+
+def test_fl302_across_helper_boundary():
+    # single-file view: to_host is opaque, nothing fires
+    assert rules(HOT_FEEDS_DEVICE, path=HOT) == []
+    found = lint_units([(HELPER, HELPER_SYNCS), (HOT, HOT_FEEDS_DEVICE)])
+    assert [f.rule for f in found] == ["FL302"]
+    assert "to_host" in found[0].message
+    # host values may flow into the same helper freely
+    ok = lint_units([(HELPER, HELPER_SYNCS), (HOT, """
+        import numpy as np
+        from repro.launch.helper_mod import to_host
+        def f(x):
+            y = np.exp(x)
+            return to_host(y)
+    """)])
+    assert [f.rule for f in ok] == []
+
+
+def test_fl303_through_device_returning_helper():
+    # a helper whose summary says "returns a device value" taints its call
+    # sites: np.asarray on the result is the implicit-transfer hazard even
+    # though the jnp math lives in the callee
+    found = lint(
+        """
+        import jax.numpy as jnp
+        import numpy as np
+        def _scores(x):
+            return jnp.exp(x)
+        def f(x):
+            return np.asarray(_scores(x))
+        """,
+        path=HOT,
+    )
+    assert [f.rule for f in found] == ["FL303"]
+
+
+# ======================================================================
+# FL5 — async discipline
+# ======================================================================
+
+def test_fl501_blocking_reachable_from_gateway_coroutine_tp():
+    found = lint(
+        """
+        import time
+        def _backoff():
+            time.sleep(0.1)
+        class Gw:
+            async def handle(self, req):
+                _backoff()
+        """,
+        path=GATEWAY,
+    )
+    assert [f.rule for f in found] == ["FL501"]
+    assert "_backoff" in found[0].message  # the chain is named
+
+
+def test_fl501_async_sleep_and_non_gateway_tn():
+    # awaiting asyncio.sleep suspends instead of blocking
+    assert rules("""
+        import asyncio
+        class Gw:
+            async def handle(self, req):
+                await asyncio.sleep(0.1)
+    """, path=GATEWAY) == []
+    # the same blocking chain outside gateway/ is not FL5's business
+    assert rules("""
+        import time
+        def _backoff():
+            time.sleep(0.1)
+        class Tool:
+            async def handle(self, req):
+                _backoff()
+    """, path=COLD) == []
+
+
+def test_fl502_step_outside_driver_tp_and_registered_driver_tn():
+    found = lint(
+        """
+        class Gw:
+            async def handle(self, req):
+                self.serve.step()
+        """,
+        path=GATEWAY,
+    )
+    assert [f.rule for f in found] == ["FL502"]
+    # the create_task-registered driver owns the step loop legitimately
+    assert rules("""
+        import asyncio
+        class Gw:
+            async def start(self):
+                asyncio.get_running_loop().create_task(self._drive())
+            async def _drive(self):
+                while True:
+                    self.serve.step()
+    """, path=GATEWAY) == []
+
+
+def test_fl503_unawaited_coroutine_tp_and_tn():
+    found = lint("""
+        async def notify(x):
+            return x
+        def fire(x):
+            notify(x)
+    """)
+    assert [f.rule for f in found] == ["FL503"]
+    assert "notify" in found[0].message
+    assert rules("""
+        import asyncio
+        async def notify(x):
+            return x
+        async def fire(x):
+            await notify(x)
+            asyncio.create_task(notify(x))
+    """) == []
+
+
+def test_fl504_missing_sentinel_tp():
+    found = lint(
+        """
+        class Stream:
+            def pump(self, toks):
+                while toks:
+                    self._q.put_nowait(toks.pop())
+        """,
+        path=GATEWAY,
+    )
+    assert [f.rule for f in found] == ["FL504"]
+    assert "END sentinel" in found[0].message
+
+
+def test_fl504_sentinel_inside_data_loop_tp():
+    found = lint(
+        """
+        class Stream:
+            def pump(self, toks):
+                while toks:
+                    self._q.put_nowait(toks.pop())
+                    self._q.put_nowait(None)
+        """,
+        path=GATEWAY,
+    )
+    assert "FL504" in [f.rule for f in found]
+    assert any("more than once" in f.message for f in found)
+
+
+def test_fl504_sentinel_after_loop_and_cross_method_tn():
+    # sentinel after the loop, or on a different method of the same class
+    # (producer pumps, terminal path finalizes) — both are the blessed shape
+    assert rules("""
+        class Stream:
+            def pump(self, toks):
+                while toks:
+                    self._q.put_nowait(toks.pop())
+                self._q.put_nowait(None)
+    """, path=GATEWAY) == []
+    assert rules("""
+        _END = object()
+        class Stream:
+            def pump(self, toks):
+                while toks:
+                    self._q.put_nowait(toks.pop())
+            def finish(self):
+                self._q.put_nowait(_END)
+    """, path=GATEWAY) == []
+
+
+# ======================================================================
+# FL6 — resource lifecycle
+# ======================================================================
+
+def test_fl601_disconnect_path_drops_kv_pages_tp():
+    # seeded reproduction of the PR-9 leak: the disconnect handler grabs
+    # pages, then an early return on the aborted path forgets them
+    found = lint("""
+        class Gateway:
+            def on_disconnect(self, req):
+                pages = self.kv.allocate(req.n_pages)
+                if req.aborted:
+                    return
+                self.table[req.rid] = pages
+    """)
+    assert [f.rule for f in found] == ["FL601"]
+    assert "pages" in found[0].message and "leak" in found[0].message
+
+
+def test_fl601_finally_release_and_none_guard_tn():
+    # try/finally covers every exit; an acquire-failed None guard that
+    # names the resource is the failure path, not a leak
+    assert rules("""
+        class Gateway:
+            def serve(self, req):
+                pages = self.kv.allocate(req.n_pages)
+                try:
+                    if req.aborted:
+                        return None
+                    return self.run(req, pages)
+                finally:
+                    self.kv.free(pages)
+    """) == []
+    assert rules("""
+        class Gateway:
+            def admit(self, req):
+                pages = self.kv.allocate(req.n_pages)
+                if pages is None:
+                    return None
+                self.table[req.rid] = pages
+                return req.rid
+    """) == []
+
+
+def test_fl602_incref_without_decref_tp_and_paired_tn():
+    found = lint("""
+        class KVCacheManager:
+            def share(self, page):
+                page.ref_count += 1
+    """)
+    assert [f.rule for f in found] == ["FL602"]
+    assert rules("""
+        class KVCacheManager:
+            def share(self, page):
+                page.ref_count += 1
+            def release(self, page):
+                page.ref_count -= 1
+    """) == []
+
+
+def test_fl603_double_terminal_assign_tp_and_branched_tn():
+    found = lint("""
+        class S:
+            FINISHED = 1
+            CANCELLED = 2
+        def finish(req, cancelled):
+            req.status = S.FINISHED
+            if cancelled:
+                req.status = S.CANCELLED
+    """)
+    assert [f.rule for f in found] == ["FL603"]
+    # exclusive branches each assign once: exactly-once holds on every path
+    assert rules("""
+        class S:
+            FINISHED = 1
+            CANCELLED = 2
+        def finish(req, cancelled):
+            if cancelled:
+                req.status = S.CANCELLED
+            else:
+                req.status = S.FINISHED
+    """) == []
+
+
+def test_fl604_pre_pr9_falsy_timestamp_pattern_tp():
+    # the EXACT pre-PR-9 bug shape: Optional[float] arrival stamp where a
+    # real tick-0 arrival is falsy, guarded by `or`
+    found = lint("""
+        import dataclasses
+        from typing import Optional
+        @dataclasses.dataclass
+        class Request:
+            arrival_time: Optional[float] = None
+            slo_ttft: Optional[float] = None
+        def edf_deadline(req):
+            return (req.arrival_time or 0.0) + req.slo_ttft
+    """)
+    assert [f.rule for f in found] == ["FL604"]
+    assert "arrival_time" in found[0].message
+    assert "is not None" in found[0].message
+
+
+def test_fl604_annotated_param_truthiness_tp():
+    found = lint("""
+        from typing import Optional
+        def latency(t_first: Optional[float], now: float):
+            if t_first:
+                return now - t_first
+            return None
+    """)
+    assert [f.rule for f in found] == ["FL604"]
+
+
+def test_fl604_is_not_none_and_config_knob_tn():
+    # the fixed shape is clean ...
+    assert rules("""
+        import dataclasses
+        from typing import Optional
+        @dataclasses.dataclass
+        class Request:
+            arrival_time: Optional[float] = None
+        def edf_deadline(req, slo):
+            arrival = req.arrival_time if req.arrival_time is not None else 0.0
+            return arrival + slo
+    """) == []
+    # ... and Optional[int] CONFIG knobs keep their idiomatic 0-means-off
+    # truthiness: only stamp-shaped names are in scope
+    assert rules("""
+        from typing import Optional
+        def plan(max_context: Optional[int]):
+            if max_context:
+                return max_context
+            return 4096
+    """) == []
+
+
+# ======================================================================
+# CLI surface: --format github, --diff BASE
+# ======================================================================
+
+def test_github_annotation_format_and_escaping():
+    f = Finding(file="src/a.py", line=7, col=2, rule="FL501",
+                message="bad:\nthing, 100%")
+    out = github_annotation(f)
+    assert out.startswith("::error file=src/a.py,line=7,col=3,"
+                          "title=flowlint FL501::")
+    # newline/percent escaped so the workflow command survives one line
+    assert "\n" not in out and "bad:%0Athing, 100%25" in out
+
+
+def test_parse_unified_diff_maps_changed_lines():
+    diff = textwrap.dedent("""\
+        diff --git a/src/a.py b/src/a.py
+        --- a/src/a.py
+        +++ b/src/a.py
+        @@ -10,2 +12,3 @@ def f():
+        +x = 1
+        +y = 2
+        +z = 3
+        @@ -40 +44 @@ def g():
+        +w = 4
+        diff --git a/src/gone.py b/src/gone.py
+        --- a/src/gone.py
+        +++ /dev/null
+        @@ -1,5 +0,0 @@
+        diff --git a/src/b.py b/src/b.py
+        --- a/src/b.py
+        +++ b/src/b.py
+        @@ -3,0 +4,2 @@
+        +p = 1
+        +q = 2
+        """)
+    changed = parse_unified_diff(diff)
+    assert changed == {"src/a.py": {12, 13, 14, 44}, "src/b.py": {4, 5}}
+
+
+def test_diff_gating_suppresses_findings_off_changed_lines(tmp_path):
+    # a file untouched since HEAD carries a finding: --diff filters it out,
+    # the plain run still fails — annotations land only on the PR's lines
+    bad = tmp_path / "gateway" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nasync def h():\n    time.sleep(1)\n")
+    base = [sys.executable, "-m", "tools.flowlint", str(bad)]
+    plain = subprocess.run(base, cwd=REPO, capture_output=True, text=True)
+    assert plain.returncode == 1 and "FL501" in plain.stdout
+    gated = subprocess.run(base + ["--format", "github", "--diff", "HEAD"],
+                           cwd=REPO, capture_output=True, text=True)
+    assert gated.returncode == 0, gated.stderr
+    assert "::error" not in gated.stdout
+
+
+# ======================================================================
+# integration: the repo itself, under the CI latency budget
+# ======================================================================
+
+def test_repo_clean_within_runtime_budget():
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.flowlint", "src", "tests", "tools",
+         "--fail-on-new", "--json"],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    elapsed = time.perf_counter() - t0
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["new"] == []
+    assert payload["baselined"] == 0     # the baseline is EMPTY and stays so
+    # CI budget: the interprocedural pass must stay interactive-speed
+    assert elapsed < 10.0, f"flowlint took {elapsed:.1f}s (budget 10s)"

@@ -22,6 +22,7 @@ from repro.api import ServeConfig, StreamServe
 from repro.distributed.sharding import unzip_params
 from repro.gateway import GatewayThread
 from repro.gateway.client import (
+    KeepAliveClient,
     SSEClient,
     asse_collect,
     completion_body,
@@ -86,6 +87,44 @@ def test_unknown_routes_and_methods(gw):
     assert status == 400
     status, _, _ = http_request(host, port, "POST", "/v1/cancel/req-nope")
     assert status == 404
+
+
+def test_keepalive_reuses_one_socket(gw):
+    """Connection: keep-alive serves ≥3 requests over ONE TCP connection."""
+    import json
+
+    with KeepAliveClient(gw["host"], gw["port"]) as ka:
+        for i in range(3):
+            status, headers, body = ka.request("GET", "/healthz")
+            assert status == 200, f"request {i} on reused socket: {status}"
+            assert headers["connection"] == "keep-alive"
+            assert "keep-alive" in headers  # timeout/max advertised
+            assert json.loads(body)["status"] == "ok"
+        # a non-streaming completion rides the same socket too
+        status, headers, body = ka.request(
+            "POST", "/v1/completions", completion_body(PROMPT, 2, stream=False)
+        )
+        assert status == 200 and headers["connection"] == "keep-alive"
+        assert len(json.loads(body)["choices"][0]["token_ids"]) == 2
+        assert not ka.closed
+    _drain(gw)
+
+
+def test_close_requested_is_honored(gw):
+    # the default clients still send Connection: close and must get it back
+    status, headers, _ = http_request(gw["host"], gw["port"], "GET", "/healthz")
+    assert status == 200
+    assert headers["connection"] == "close"
+
+
+def test_sse_always_closes_connection(gw):
+    # streams own their connection: keep-alive must NOT be offered on SSE
+    with SSEClient(gw["host"], gw["port"], "/v1/completions",
+                   completion_body(PROMPT, 2, stream=True)) as sse:
+        assert sse.status == 200
+        assert sse.headers["connection"] == "close"
+        assert len(list(sse.events())) >= 1
+    _drain(gw)
 
 
 # --------------------------------------------------------------- completions

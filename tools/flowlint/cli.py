@@ -5,7 +5,9 @@ Typical invocations::
     python -m tools.flowlint src/ tests/                  # report everything
     python -m tools.flowlint src/ tests/ --fail-on-new    # CI gate
     python -m tools.flowlint src/ --write-baseline        # refresh baseline
-    python -m tools.flowlint src/ --json                  # machine-readable
+    python -m tools.flowlint src/ --format json           # machine-readable
+    python -m tools.flowlint src/ --format github \\
+        --diff origin/main                                # PR annotations
 
 Exit codes: 0 clean (or, with ``--fail-on-new``, no findings beyond the
 baseline); 1 findings present / new findings; 2 usage error.
@@ -14,25 +16,51 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
 from tools.flowlint.core import (
     Finding, load_baseline, scan_paths, split_new, write_baseline,
 )
+from tools.flowlint.diffs import filter_to_diff
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def github_annotation(f: Finding) -> str:
+    """One GitHub Actions workflow command per finding.
+
+    Newlines/percents in messages would terminate the command early, so they
+    are URL-style escaped per the Actions toolkit convention.
+    """
+    def esc(s: str, *, prop: bool = False) -> str:
+        s = s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
+        if prop:
+            s = s.replace(":", "%3A").replace(",", "%2C")
+        return s
+
+    props = (f"file={esc(f.file, prop=True)},line={f.line},"
+             f"col={f.col + 1},title={esc('flowlint ' + f.rule, prop=True)}")
+    return f"::error {props}::{esc(f.message)}"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="flowlint",
-        description="AST lint for JAX trace/donation/host-sync/determinism "
-                    "hazards (rules FL1xx-FL4xx).",
+        description="Two-pass AST lint for JAX trace/donation/host-sync/"
+                    "determinism/async/lifecycle hazards (rules FL1xx-FL6xx).",
     )
     ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--format", choices=("text", "github", "json"),
+                    default="text", dest="fmt",
+                    help="output format: human text (default), GitHub "
+                         "Actions ::error annotations, or JSON")
     ap.add_argument("--json", action="store_true", dest="as_json",
-                    help="emit machine-readable JSON to stdout")
+                    help="shorthand for --format json")
+    ap.add_argument("--diff", metavar="BASE", default=None,
+                    help="report only findings on lines changed vs the git "
+                         "rev BASE (e.g. origin/main)")
     ap.add_argument("--fail-on-new", action="store_true",
                     help="exit 1 only for findings NOT in the baseline")
     ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
@@ -40,6 +68,7 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings to the baseline file and exit 0")
     args = ap.parse_args(argv)
+    fmt = "json" if args.as_json else args.fmt
 
     findings = scan_paths(args.paths)
 
@@ -47,6 +76,13 @@ def main(argv=None) -> int:
         write_baseline(args.baseline, findings)
         print(f"flowlint: wrote {len(findings)} finding(s) to {args.baseline}")
         return 0
+
+    if args.diff is not None:
+        try:
+            findings = filter_to_diff(findings, args.diff)
+        except (subprocess.CalledProcessError, FileNotFoundError) as e:
+            print(f"flowlint: --diff {args.diff} failed: {e}", file=sys.stderr)
+            return 2
 
     baseline = load_baseline(args.baseline) if (
         args.fail_on_new and args.baseline
@@ -56,7 +92,7 @@ def main(argv=None) -> int:
     else:
         old, new = [], list(findings)
 
-    if args.as_json:
+    if fmt == "json":
         payload = {
             "findings": [f.to_json() for f in findings],
             "new": [f.to_json() for f in new],
@@ -67,7 +103,7 @@ def main(argv=None) -> int:
         sys.stdout.write("\n")
     else:
         for f in new:
-            print(f.format())
+            print(github_annotation(f) if fmt == "github" else f.format())
         if old:
             print(f"flowlint: {len(old)} baselined finding(s) suppressed "
                   f"({args.baseline.name})", file=sys.stderr)

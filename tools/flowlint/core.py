@@ -165,6 +165,7 @@ class FileContext:
         self.imports = ImportMap(tree)
         self.hot = is_hot_path(path)
         self.findings: List[Finding] = []
+        self.project = None  # set by analyze_project before rules run
 
     def line_text(self, lineno: int) -> str:
         if 1 <= lineno <= len(self.lines):
@@ -179,29 +180,51 @@ class FileContext:
         ))
 
 
-def analyze_source(path: str, source: str) -> List[Finding]:
-    """Run every rule family over one file; pragma-suppressed findings drop."""
+def analyze_project(units: Sequence[Tuple[str, str]]) -> List[Finding]:
+    """Two-pass analysis over ``(path, source)`` units.
+
+    Pass 1 parses every unit and builds the cross-file :class:`Project`
+    (call graph + function summaries); pass 2 runs the rule families per
+    file with ``ctx.project`` available for interprocedural lookups.
+    Pragma-suppressed findings drop per file, reasonless pragmas surface
+    as FL001.
+    """
+    from tools.flowlint.project import Project
     from tools.flowlint.rules import ALL_RULES
 
-    try:
-        tree = ast.parse(source, filename=path)
-    except SyntaxError as e:
-        line = e.lineno or 1
-        return [Finding(file=path, line=line, col=e.offset or 0, rule="FL000",
-                        message=f"syntax error: {e.msg}", text="")]
-    ctx = FileContext(path, source, tree)
-    for rule in ALL_RULES:
-        rule(ctx)
-    pragmas = Pragmas(source)
-    kept = [f for f in ctx.findings if not pragmas.suppresses(f)]
-    for line, codes in pragmas.meta:
-        kept.append(Finding(
-            file=path, line=line, col=0, rule="FL001",
-            message=f"pragma disable={codes} has no reason — "
-                    "suppressions must say why",
-            text=ctx.line_text(line),
-        ))
-    return sorted(kept, key=lambda f: (f.line, f.col, f.rule))
+    findings: List[Finding] = []
+    contexts: List[FileContext] = []
+    for path, source in units:
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError as e:
+            findings.append(Finding(
+                file=path, line=e.lineno or 1, col=e.offset or 0,
+                rule="FL000", message=f"syntax error: {e.msg}", text="",
+            ))
+            continue
+        contexts.append(FileContext(path, source, tree))
+    project = Project(contexts)
+    for ctx in contexts:
+        ctx.project = project
+        for rule in ALL_RULES:
+            rule(ctx)
+        pragmas = Pragmas(ctx.source)
+        kept = [f for f in ctx.findings if not pragmas.suppresses(f)]
+        for line, codes in pragmas.meta:
+            kept.append(Finding(
+                file=ctx.path, line=line, col=0, rule="FL001",
+                message=f"pragma disable={codes} has no reason — "
+                        "suppressions must say why",
+                text=ctx.line_text(line),
+            ))
+        findings.extend(sorted(kept, key=lambda f: (f.line, f.col, f.rule)))
+    return findings
+
+
+def analyze_source(path: str, source: str) -> List[Finding]:
+    """Run every rule family over ONE file (a single-unit project)."""
+    return analyze_project([(path, source)])
 
 
 def discover(paths: Sequence[str]) -> List[Path]:
@@ -220,10 +243,8 @@ def discover(paths: Sequence[str]) -> List[Path]:
 
 
 def scan_paths(paths: Sequence[str]) -> List[Finding]:
-    findings: List[Finding] = []
-    for f in discover(paths):
-        findings.extend(analyze_source(f.as_posix(), f.read_text()))
-    return findings
+    units = [(f.as_posix(), f.read_text()) for f in discover(paths)]
+    return analyze_project(units)
 
 
 # --------------------------------------------------------------------------

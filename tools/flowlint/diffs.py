@@ -1,0 +1,85 @@
+"""``--diff BASE`` support: restrict findings to lines changed since BASE.
+
+The parser consumes ``git diff --unified=0`` output — zero-context hunks
+mean every ``+`` line in a hunk is an actual addition/modification, so the
+``@@ -a,b +c,d @@`` header alone gives the changed line range on the new
+side.  Keeping the parser pure (text in, mapping out) lets tests feed it
+hand-written diffs without a git checkout.
+"""
+from __future__ import annotations
+
+import subprocess
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+_HUNK_PREFIX = "@@ "
+_NEWFILE_PREFIX = "+++ "
+
+
+def parse_unified_diff(text: str) -> Dict[str, Set[int]]:
+    """Map new-side file path -> set of changed (added/modified) line numbers.
+
+    Deleted files (``+++ /dev/null``) are skipped: there is no new-side line
+    to anchor a finding on.
+    """
+    changed: Dict[str, Set[int]] = {}
+    current: Set[int] = set()
+    for line in text.splitlines():
+        if line.startswith(_NEWFILE_PREFIX):
+            target = line[len(_NEWFILE_PREFIX):].strip()
+            if target == "/dev/null":
+                current = set()  # discarded: deletions have no new side
+                continue
+            if target.startswith("b/"):
+                target = target[2:]
+            current = changed.setdefault(target, set())
+        elif line.startswith(_HUNK_PREFIX):
+            # @@ -a[,b] +c[,d] @@  — c is the new-side start, d the length
+            # (d omitted means 1; d == 0 means a pure deletion hunk)
+            try:
+                new_side = line.split("+", 1)[1].split(" ", 1)[0]
+                start, _, length = new_side.partition(",")
+                first = int(start)
+                count = int(length) if length else 1
+            except (IndexError, ValueError):
+                continue
+            current.update(range(first, first + count))
+    return {p: lines for p, lines in changed.items() if lines}
+
+
+def git_changed_lines(base: str, cwd: str | None = None) -> Dict[str, Set[int]]:
+    """Changed lines of the working tree relative to ``base`` (a git rev)."""
+    out = subprocess.run(
+        ["git", "diff", "--unified=0", base, "--", "*.py"],
+        capture_output=True, text=True, cwd=cwd, check=True,
+    ).stdout
+    return parse_unified_diff(out)
+
+
+def _repo_root(cwd: str | None = None) -> Path:
+    out = subprocess.run(
+        ["git", "rev-parse", "--show-toplevel"],
+        capture_output=True, text=True, cwd=cwd, check=True,
+    ).stdout.strip()
+    return Path(out)
+
+
+def filter_to_diff(findings: Iterable, base: str,
+                   cwd: str | None = None) -> List:
+    """Keep only findings whose (file, line) lands on a changed line.
+
+    Finding paths come in as given on the command line (often relative to
+    the invocation directory); diff paths are repo-root-relative.  Both are
+    resolved to absolute paths before comparison.
+    """
+    changed = git_changed_lines(base, cwd=cwd)
+    root = _repo_root(cwd)
+    by_abs: Dict[str, Set[int]] = {
+        str((root / p).resolve()): lines for p, lines in changed.items()
+    }
+    kept = []
+    for f in findings:
+        lines = by_abs.get(str(Path(f.file).resolve()))
+        if lines and f.line in lines:
+            kept.append(f)
+    return kept

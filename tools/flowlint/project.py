@@ -1,0 +1,420 @@
+"""flowlint two-pass project analysis.
+
+Pass 1 parses every file once and distils each function into a
+:class:`FunctionInfo` summary: does it block the thread?  ``device_get``?
+donate a parameter into an XLA call?  return a device value?  sync one of
+its parameters?  touch ``engine.step()``?  Calls are resolved at build time
+(bare names to same-module or imported project functions, ``self.m()`` to
+same-class methods) into a call graph.
+
+Pass 2 runs a fixed-point worklist over that graph so the facts propagate:
+a helper that hides ``time.sleep`` three calls deep still marks every
+coroutine that can reach it, and a helper that donates its parameter makes
+the caller's buffer read-after-donate visible to FL2.  Rule modules consume
+the result through ``ctx.project`` — they never re-walk other files.
+
+Everything here is stdlib ``ast``; precision beats recall throughout (an
+unresolved call contributes nothing rather than guessing).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.flowlint.rules.fl2_donation import (
+    _callee_name,
+    _collect_donating_callables,
+)
+from tools.flowlint.rules.fl3_hostsync import DEVICE, _Taint
+
+# -- blocking primitives (FL501) -------------------------------------------
+#: Resolved dotted paths that block the calling thread.
+BLOCKING_PATHS = {
+    "time.sleep",
+    "subprocess.run", "subprocess.call", "subprocess.check_call",
+    "subprocess.check_output", "subprocess.Popen",
+    "socket.create_connection",
+    "select.select",
+}
+#: Attribute-leaf method names that are synchronous socket IO.  asyncio
+#: transports use write/drain/read (awaited), so these leaves only appear on
+#: raw ``socket.socket`` objects in practice.
+BLOCKING_LEAVES = {"recv", "sendall", "accept"}
+
+ENGINE_RECEIVERS = {"engine", "serve", "_engine", "_serve"}
+SCHEDULE_LEAVES = {"create_task", "ensure_future", "run_coroutine_threadsafe"}
+
+_OPTIONAL_NUMERIC_INNER = {"int", "float"}
+
+
+def module_name(path: str) -> str:
+    """Dotted module guess for a file path (``src/`` prefix stripped)."""
+    parts = list(path.replace("\\", "/").split("/"))
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[0] in ("src", "."):
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(p for p in parts if p)
+
+
+def _leaf(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def is_optional_numeric(ann: Optional[ast.AST]) -> bool:
+    """True for ``Optional[int]``/``Optional[float]``/``int | None`` style
+    annotations — the tick-stamp types where 0/0.0 is a real measurement."""
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Subscript):
+        head = _leaf(ann.value)
+        inner = ann.slice
+        if head == "Optional":
+            return _leaf(inner) in _OPTIONAL_NUMERIC_INNER
+        if head == "Union" and isinstance(inner, ast.Tuple):
+            elts = inner.elts
+            has_none = any(
+                isinstance(e, ast.Constant) and e.value is None for e in elts
+            )
+            return has_none and any(
+                _leaf(e) in _OPTIONAL_NUMERIC_INNER for e in elts
+            )
+        return False
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        sides = (ann.left, ann.right)
+        has_none = any(
+            isinstance(s, ast.Constant) and s.value is None for s in sides
+        )
+        return has_none and any(
+            _leaf(s) in _OPTIONAL_NUMERIC_INNER for s in sides
+        )
+    return False
+
+
+# -- summaries --------------------------------------------------------------
+
+@dataclasses.dataclass
+class CallSite:
+    node: ast.Call
+    key: str                 # resolved FunctionInfo key
+    bound: bool              # True for self.m() — args shift past `self`
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    key: str                 # "module.Class.meth" / "module.fn"
+    path: str
+    module: str
+    cls: Optional[str]
+    name: str
+    node: ast.AST            # FunctionDef | AsyncFunctionDef
+    is_async: bool
+    params: List[str]        # positional parameter names (self included)
+    calls: List[CallSite] = dataclasses.field(default_factory=list)
+    local_async: Set[str] = dataclasses.field(default_factory=set)
+    # pass-1 direct facts
+    blocking: List[Tuple[ast.AST, str]] = dataclasses.field(default_factory=list)
+    device_get_sites: List[ast.AST] = dataclasses.field(default_factory=list)
+    donated_params: Set[int] = dataclasses.field(default_factory=set)
+    syncs_params: Set[int] = dataclasses.field(default_factory=set)
+    returns_device: bool = False
+    step_sites: List[ast.AST] = dataclasses.field(default_factory=list)
+    scheduled: bool = False  # registered via create_task/ensure_future
+    # pass-2 propagated witnesses: (call site in THIS fn, chain, terminal op)
+    may_block: Optional[Tuple[ast.AST, Tuple[str, ...], str]] = None
+    may_device_get: Optional[Tuple[ast.AST, Tuple[str, ...]]] = None
+    may_step: Optional[Tuple[ast.AST, Tuple[str, ...]]] = None
+
+    def blocks(self) -> Optional[Tuple[ast.AST, Tuple[str, ...], str]]:
+        if self.blocking:
+            node, op = self.blocking[0]
+            return (node, (), op)
+        return self.may_block
+
+    def steps(self) -> Optional[Tuple[ast.AST, Tuple[str, ...]]]:
+        if self.step_sites:
+            return (self.step_sites[0], ())
+        return self.may_step
+
+    def gets(self) -> Optional[Tuple[ast.AST, Tuple[str, ...]]]:
+        if self.device_get_sites:
+            return (self.device_get_sites[0], ())
+        return self.may_device_get
+
+
+def _own_statements(fn: ast.AST):
+    """Walk a function's own nodes, stopping at nested def/class bodies
+    (those are summarized as their own functions)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class Project:
+    """Call graph + propagated per-function summaries over a file set."""
+
+    def __init__(self, contexts: Sequence) -> None:
+        self.functions: Dict[str, FunctionInfo] = {}
+        self._by_node: Dict[int, FunctionInfo] = {}
+        self._callee_by_call: Dict[int, CallSite] = {}
+        #: attribute names annotated Optional[int]/Optional[float] anywhere
+        #: in the project (class bodies / self-attr AnnAssigns) — FL604.
+        self.optional_numeric_attrs: Set[str] = set()
+        self._collect(contexts)
+        self._resolve_calls(contexts)
+        self._mark_scheduled(contexts)
+        self._propagate()
+
+    # ---------------------------------------------------------------- pass 1
+    def _collect(self, contexts) -> None:
+        for ctx in contexts:
+            donating = _collect_donating_callables(ctx)
+            self._collect_annotations(ctx.tree)
+            for cls, fn in _functions_with_class(ctx.tree):
+                qual = f"{cls}.{fn.name}" if cls else fn.name
+                info = FunctionInfo(
+                    key=f"{module_name(ctx.path)}.{qual}",
+                    path=ctx.path, module=module_name(ctx.path), cls=cls,
+                    name=fn.name, node=fn,
+                    is_async=isinstance(fn, ast.AsyncFunctionDef),
+                    params=[a.arg for a in
+                            fn.args.posonlyargs + fn.args.args],
+                )
+                self._facts(info, ctx, donating)
+                # first definition wins on duplicate names (rare; precision)
+                self.functions.setdefault(info.key, info)
+                # node-identity map within one analysis run, not a cache key
+                self._by_node[id(fn)] = info  # flowlint: disable=FL103 AST node identity, single process
+
+    def _collect_annotations(self, tree: ast.AST) -> None:
+        # ``self.x: Optional[float] = None`` anywhere marks attr ``x``
+        for node in ast.walk(tree):
+            if isinstance(node, ast.AnnAssign) and is_optional_numeric(
+                node.annotation
+            ) and isinstance(node.target, ast.Attribute):
+                self.optional_numeric_attrs.add(node.target.attr)
+        # class-body field annotations (dataclass style): Name targets
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)
+                            and is_optional_numeric(stmt.annotation)):
+                        self.optional_numeric_attrs.add(stmt.target.id)
+
+    def _facts(self, info: FunctionInfo, ctx, donating: Dict[str, Set[int]]
+               ) -> None:
+        imports = ctx.imports
+        param_pos = {p: i for i, p in enumerate(info.params)}
+        taint = _Taint(imports)
+        for node in _own_statements(info.node):
+            if isinstance(node, ast.Assign):
+                taint.assign(node)
+            if isinstance(node, ast.AsyncFunctionDef):
+                info.local_async.add(node.name)
+            if not isinstance(node, ast.Call):
+                continue
+            path = _resolve(imports, node.func)
+            leaf = _leaf(node.func)
+            if path in BLOCKING_PATHS:
+                info.blocking.append((node, path))
+            elif (leaf in BLOCKING_LEAVES
+                  and isinstance(node.func, ast.Attribute)
+                  and path is None):
+                info.blocking.append((node, f".{leaf}()"))
+            if path == "jax.device_get":
+                info.device_get_sites.append(node)
+                for a in node.args:
+                    if isinstance(a, ast.Name) and a.id in param_pos:
+                        info.syncs_params.add(param_pos[a.id])
+            if (leaf == "step" and isinstance(node.func, ast.Attribute)
+                    and _leaf(node.func.value) in ENGINE_RECEIVERS):
+                info.step_sites.append(node)
+            # donation of own parameters into a local jitted callable
+            positions = donating.get(_callee_name(node) or "")
+            if positions:
+                for i in positions:
+                    if i < len(node.args):
+                        a = node.args[i]
+                        if isinstance(a, ast.Name) and a.id in param_pos:
+                            info.donated_params.add(param_pos[a.id])
+            # parameter synced by .item() / float() / np.asarray
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in param_pos):
+                info.syncs_params.add(param_pos[node.func.value.id])
+            elif (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in param_pos):
+                info.syncs_params.add(param_pos[node.args[0].id])
+            elif (path in ("numpy.asarray", "numpy.array", "numpy.copy")
+                    and node.args and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in param_pos):
+                info.syncs_params.add(param_pos[node.args[0].id])
+        for node in _own_statements(info.node):
+            if isinstance(node, ast.Return) and node.value is not None:
+                if taint.of(node.value) == DEVICE:
+                    info.returns_device = True
+
+    # ------------------------------------------------------- call resolution
+    def _resolve_calls(self, contexts) -> None:
+        by_path: Dict[str, List[FunctionInfo]] = {}
+        for info in self._by_node.values():
+            by_path.setdefault(info.path, []).append(info)
+        for ctx in contexts:
+            mod = module_name(ctx.path)
+            for info in by_path.get(ctx.path, ()):
+                for node in _own_statements(info.node):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    site = self._resolve_one(ctx, mod, info, node)
+                    if site is not None:
+                        info.calls.append(site)
+                        self._callee_by_call[id(node)] = site  # flowlint: disable=FL103 AST node identity, single process
+
+    def _resolve_one(self, ctx, mod: str, caller: FunctionInfo,
+                     call: ast.Call) -> Optional[CallSite]:
+        func = call.func
+        if isinstance(func, ast.Name):
+            key = f"{mod}.{func.id}"
+            if key in self.functions and self.functions[key].cls is None:
+                return CallSite(call, key, bound=False)
+            dotted = _resolve(ctx.imports, func)
+            if dotted and dotted in self.functions:
+                return CallSite(call, dotted, bound=False)
+            return None
+        if isinstance(func, ast.Attribute):
+            if isinstance(func.value, ast.Name) and func.value.id == "self" \
+                    and caller.cls:
+                key = f"{mod}.{caller.cls}.{func.attr}"
+                if key in self.functions:
+                    return CallSite(call, key, bound=True)
+                return None
+            dotted = _resolve(ctx.imports, func)
+            if dotted and dotted in self.functions \
+                    and self.functions[dotted].cls is None:
+                return CallSite(call, dotted, bound=False)
+        return None
+
+    # ------------------------------------------------- scheduled coroutines
+    def _mark_scheduled(self, contexts) -> None:
+        self._scheduling_sites: Set[int] = set()
+        for ctx in contexts:
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _leaf(node.func) not in SCHEDULE_LEAVES:
+                    continue
+                for arg in node.args:
+                    if isinstance(arg, ast.Call):
+                        site = self._callee_by_call.get(id(arg))
+                        if site is not None:
+                            self.functions[site.key].scheduled = True
+                            # the wrapping call only schedules — the body
+                            # runs on the loop, not inline in the caller
+                            self._scheduling_sites.add(id(arg))
+
+    # ---------------------------------------------------------------- pass 2
+    def _propagate(self) -> None:
+        changed = True
+        iters = 0
+        while changed and iters < 50:      # depth bound, not a correctness one
+            changed = False
+            iters += 1
+            for f in self.functions.values():
+                for site in f.calls:
+                    g = self.functions[site.key]
+                    changed |= self._flow(f, g, site)
+
+    def _flow(self, f: FunctionInfo, g: FunctionInfo, site: CallSite) -> bool:
+        changed = False
+        inline = id(site.node) not in self._scheduling_sites
+        blk = g.blocks()
+        # an `await` of an async callee suspends, it doesn't block — but a
+        # SYNC callee that blocks poisons every caller, async or not; an
+        # async callee that blocks poisons its awaiters too (the loop stalls
+        # while its frame runs).  A create_task(...) wrapper runs nothing
+        # inline, so neither fact flows through it.
+        if inline and blk is not None and f.may_block is None \
+                and not f.blocking:
+            f.may_block = (site.node, (g.key, *blk[1]), blk[2])
+            changed = True
+        dg = g.gets()
+        if inline and dg is not None and f.may_device_get is None \
+                and not f.device_get_sites:
+            f.may_device_get = (site.node, (g.key, *dg[1]))
+            changed = True
+        st = g.steps()
+        if inline and st is not None and f.may_step is None \
+                and not f.step_sites:
+            f.may_step = (site.node, (g.key, *st[1]))
+            changed = True
+        # donated/synced params flow backwards: an arg fed into the callee's
+        # donated (or synced) position marks the caller's own parameter
+        param_pos = {p: i for i, p in enumerate(f.params)}
+        shift = 1 if site.bound else 0
+        for hazard_set, sink in ((g.donated_params, f.donated_params),
+                                 (g.syncs_params, f.syncs_params)):
+            for gi in hazard_set:
+                ai = gi - shift
+                if 0 <= ai < len(site.node.args):
+                    a = site.node.args[ai]
+                    if isinstance(a, ast.Name) and a.id in param_pos \
+                            and param_pos[a.id] not in sink:
+                        sink.add(param_pos[a.id])
+                        changed = True
+        return changed
+
+    # ----------------------------------------------------------- rule access
+    def info_for(self, fn_node: ast.AST) -> Optional[FunctionInfo]:
+        return self._by_node.get(id(fn_node))
+
+    def infos_in(self, path: str) -> List[FunctionInfo]:
+        return [i for i in self._by_node.values() if i.path == path]
+
+    def callee_of(self, call: ast.Call) -> Optional[FunctionInfo]:
+        site = self._callee_by_call.get(id(call))
+        return self.functions.get(site.key) if site else None
+
+    def callsite_of(self, call: ast.Call) -> Optional[CallSite]:
+        return self._callee_by_call.get(id(call))
+
+
+def _functions_with_class(tree: ast.AST):
+    """Yield (enclosing_class_name | None, funcdef) for every function."""
+    out: List[Tuple[Optional[str], ast.AST]] = []
+
+    def walk(node: ast.AST, cls: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append((cls, child))
+                walk(child, None)   # nested defs lose the class binding
+            else:
+                walk(child, cls)
+
+    walk(tree, None)
+    return out
+
+
+def _resolve(imports, node) -> Optional[str]:
+    try:
+        return imports.resolve(node)
+    except Exception:
+        return None

@@ -1,10 +1,17 @@
-"""Rule registry: each entry is ``rule(ctx: FileContext) -> None``."""
+"""Rule registry: each entry is ``rule(ctx: FileContext) -> None``.
+
+Rules run per file but may consult ``ctx.project`` (the two-pass call
+graph + function summaries) for interprocedural facts.
+"""
 from tools.flowlint.rules.fl1_retrace import check_fl1
 from tools.flowlint.rules.fl2_donation import check_fl2
 from tools.flowlint.rules.fl3_hostsync import check_fl3
 from tools.flowlint.rules.fl4_determinism import check_fl4
+from tools.flowlint.rules.fl5_async import check_fl5
+from tools.flowlint.rules.fl6_lifecycle import check_fl6
 
-ALL_RULES = (check_fl1, check_fl2, check_fl3, check_fl4)
+ALL_RULES = (check_fl1, check_fl2, check_fl3, check_fl4, check_fl5,
+             check_fl6)
 
 RULE_DOCS = {
     "FL000": "file failed to parse",
@@ -23,4 +30,12 @@ RULE_DOCS = {
     "FL402": "time.time() — non-monotonic wall clock",
     "FL403": "global / unseeded RNG call",
     "FL404": "iteration over a set — PYTHONHASHSEED-dependent order",
+    "FL501": "blocking call reachable from a gateway coroutine",
+    "FL502": "engine.step() reachable from a non-driver coroutine",
+    "FL503": "coroutine constructed but never awaited or scheduled",
+    "FL504": "stream queue puts without an exactly-once END-sentinel path",
+    "FL601": "resource acquired but not released/consumed on some exit path",
+    "FL602": "refcount increment with no paired decrement in the class",
+    "FL603": "terminal state assigned twice on one path",
+    "FL604": "Optional[int/float] compared by truthiness instead of 'is not None'",
 }

@@ -120,18 +120,32 @@ class _FunctionChecker:
 
     def _donations_in(self, stmt: ast.stmt) -> List[Tuple[str, ast.Call, str]]:
         out = []
+        project = getattr(self.ctx, "project", None)
         for node in ast.walk(stmt):
             if not isinstance(node, ast.Call):
                 continue
             name = _callee_name(node)
             positions = self.registry.get(name or "")
-            if not positions:
+            if positions:
+                for i in positions:
+                    if i < len(node.args):
+                        k = _expr_key(node.args[i])
+                        if k:
+                            out.append((k, node, name))
                 continue
-            for i in positions:
-                if i < len(node.args):
-                    k = _expr_key(node.args[i])
+            # interprocedural: the callee is a project function whose summary
+            # says it donates one of its parameters (directly or transitively)
+            site = project.callsite_of(node) if project else None
+            if site is None:
+                continue
+            callee = project.functions[site.key]
+            shift = 1 if site.bound else 0
+            for gi in callee.donated_params:
+                ai = gi - shift
+                if 0 <= ai < len(node.args):
+                    k = _expr_key(node.args[ai])
                     if k:
-                        out.append((k, node, name))
+                        out.append((k, node, callee.name))
         return out
 
     def _register_donations(self, stmt: ast.stmt, assigned: Set[str]) -> None:
@@ -257,9 +271,23 @@ class _FunctionChecker:
         return keys
 
 
+def _any_donating_callee(ctx) -> bool:
+    """True when some resolved call in this file reaches a project function
+    that donates a parameter — the file needs the FL2 walk even though it
+    defines no donating jit of its own."""
+    project = getattr(ctx, "project", None)
+    if project is None:
+        return False
+    for info in project.infos_in(ctx.path):
+        for site in info.calls:
+            if project.functions[site.key].donated_params:
+                return True
+    return False
+
+
 def check_fl2(ctx) -> None:
     registry = _collect_donating_callables(ctx)
-    if not registry:
+    if not registry and not _any_donating_callee(ctx):
         return
     for node in ast.walk(ctx.tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):

@@ -40,10 +40,16 @@ META_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding"}
 
 
 class _Taint:
-    """Flow-insensitive-enough expression classifier per function."""
+    """Flow-insensitive-enough expression classifier per function.
 
-    def __init__(self, imports):
+    ``resolver`` (optional) maps a Call node to a taint state via project
+    summaries — a helper whose summary says *returns a device value* makes
+    its call sites DEVICE even though the jnp math lives elsewhere.
+    """
+
+    def __init__(self, imports, resolver=None):
         self.imports = imports
+        self.resolver = resolver
         self.env: Dict[str, str] = {}
 
     # -- classification ----------------------------------------------------
@@ -89,6 +95,10 @@ class _Taint:
                 return DEVICE
             if base == HOST and path is None:
                 return HOST
+        if self.resolver is not None:
+            state = self.resolver(node)
+            if state is not None:
+                return state
         return UNKNOWN
 
     @staticmethod
@@ -145,7 +155,17 @@ class _HotPathVisitor(ast.NodeVisitor):
 
     # ----------------------------------------------------------------------
     def _check_function(self, fn) -> None:
-        taint = _Taint(self.ctx.imports)
+        project = getattr(self.ctx, "project", None)
+
+        def resolver(call: ast.Call):
+            if project is None:
+                return None
+            callee = project.callee_of(call)
+            if callee is not None and callee.returns_device:
+                return DEVICE
+            return None
+
+        taint = _Taint(self.ctx.imports, resolver)
         self._walk_block(fn.body, taint, in_loop=False)
 
     def _walk_block(self, body: List[ast.stmt], taint: _Taint, in_loop: bool) -> None:
@@ -153,9 +173,9 @@ class _HotPathVisitor(ast.NodeVisitor):
         for stmt in body:
             if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
                 continue  # nested defs are visited on their own
-            for call in self._device_gets_in_header(stmt):
+            for call, direct in self._device_gets_in_header(stmt):
                 get_sites.append(call)
-                if in_loop:
+                if in_loop and direct:
                     self.ctx.add(call, "FL304",
                                  "jax.device_get inside a loop — one blocking "
                                  "round-trip per iteration; batch the values "
@@ -201,14 +221,24 @@ class _HotPathVisitor(ast.NodeVisitor):
             return []
         return [stmt]  # simple statement: scan the whole thing
 
-    def _device_gets_in_header(self, stmt: ast.stmt) -> List[ast.Call]:
+    def _device_gets_in_header(self, stmt: ast.stmt) -> List[tuple]:
+        """(call, direct) device_get sites in a statement's header exprs.
+
+        Only direct ``jax.device_get`` calls are counted: a helper whose
+        summary reaches a device_get (e.g. ``engine.step()``) legitimately
+        owns its per-step bulk fetch, so propagating it into the per-block
+        budget would flag every driver loop.  Interprocedural FL3 instead
+        flows through ``returns_device`` taint and ``syncs_params``.
+        """
         out = []
         for root in self._header_exprs(stmt):
             for node in ast.walk(root):
-                if isinstance(node, ast.Call) and _resolve_or_none(
+                if not isinstance(node, ast.Call):
+                    continue
+                if _resolve_or_none(
                     self.ctx.imports, node.func
                 ) == DEVICE_GET:
-                    out.append(node)
+                    out.append((node, True))
         return out
 
     def _check_branch_test(self, test: ast.AST, taint: _Taint) -> None:
@@ -250,6 +280,33 @@ class _HotPathVisitor(ast.NodeVisitor):
                                      f"{path.split('.')[-1]}() on a device "
                                      "value is an implicit transfer — go "
                                      "through the step's bulk jax.device_get")
+                    else:
+                        self._check_helper_sync(node, taint)
+
+    def _check_helper_sync(self, node: ast.Call, taint: _Taint) -> None:
+        """FL302 across a call boundary: a device value fed into a helper
+        whose summary says it syncs that parameter (.item()/float()/
+        np.asarray/device_get on it)."""
+        project = getattr(self.ctx, "project", None)
+        if project is None:
+            return
+        site = project.callsite_of(node)
+        if site is None:
+            return
+        callee = project.functions[site.key]
+        if not callee.syncs_params:
+            return
+        shift = 1 if site.bound else 0
+        for gi in callee.syncs_params:
+            ai = gi - shift
+            if 0 <= ai < len(node.args) and taint.of(node.args[ai]) == DEVICE:
+                self.ctx.add(
+                    node, "FL302",
+                    f"device value passed to '{callee.name}', which forces a "
+                    "host sync on it — fetch via the step's bulk "
+                    "jax.device_get before the call",
+                )
+                return
 
 
 def check_fl3(ctx) -> None:

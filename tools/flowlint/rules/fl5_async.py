@@ -1,0 +1,166 @@
+"""FL5 — async discipline (gateway path).
+
+Motivated by the HTTP gateway (PR 9): the engine is single-threaded and the
+whole serving story rests on conventions the event loop cannot enforce —
+ONE registered driver task owns ``engine.step()``, handlers never block the
+loop, every streaming queue terminates with exactly one END sentinel.  These
+rules turn those conventions into pre-merge failures, using the project call
+graph so a hazard hidden two helpers deep still fires.
+
+* FL501 — blocking call (``time.sleep`` / sync socket ops /
+  ``subprocess.run``) reachable from an ``async def`` in ``gateway/``:
+  it stalls every connection on the loop, not just this one.
+* FL502 — ``engine.step()`` reachable from a coroutine that is not
+  registered as the driver (via ``create_task``/``ensure_future``): two
+  steppers race the scheduler state.
+* FL503 — coroutine constructed but never awaited or scheduled (a bare
+  ``foo()`` expression statement where ``foo`` is ``async def``): the body
+  silently never runs.
+* FL504 — streaming ``asyncio.Queue`` puts without a matching END-sentinel
+  path (or a sentinel put inside the data loop, so it can fire more than
+  once): consumers block forever / terminate early.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+SENTINEL_NAME_RE = re.compile(r"(^|_)(end|done|sentinel|stop|eos)$", re.I)
+
+
+def _is_gateway(path: str) -> bool:
+    p = Path(path).as_posix()
+    return "/gateway/" in p or p.startswith("gateway/")
+
+
+def _chain_text(chain: Tuple[str, ...]) -> str:
+    return " -> ".join(k.rsplit(".", 1)[-1] for k in chain)
+
+
+def _leaf(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+# ---------------------------------------------------------------- FL501/502
+def _check_coroutines(ctx, project) -> None:
+    gateway = _is_gateway(ctx.path)
+    for info in project.infos_in(ctx.path):
+        if not info.is_async:
+            continue
+        if gateway:
+            blk = info.blocks()
+            if blk is not None:
+                node, chain, op = blk
+                via = f" via {_chain_text(chain)}" if chain else ""
+                ctx.add(node, "FL501",
+                        f"blocking call ({op}){via} inside coroutine "
+                        f"'{info.name}' — it stalls the whole event loop; "
+                        "use the async equivalent or run_in_executor")
+            if not info.scheduled:
+                st = info.steps()
+                if st is not None:
+                    node, chain = st
+                    via = f" via {_chain_text(chain)}" if chain else ""
+                    ctx.add(node, "FL502",
+                            f"engine.step(){via} from coroutine "
+                            f"'{info.name}', which is not the registered "
+                            "driver task — exactly one create_task'd "
+                            "coroutine may own the step loop")
+
+
+# --------------------------------------------------------------------- FL503
+def _check_unawaited(ctx, project) -> None:
+    for info in project.infos_in(ctx.path):
+        for stmt in ast.walk(info.node):
+            if not isinstance(stmt, ast.Expr) or not isinstance(
+                stmt.value, ast.Call
+            ):
+                continue
+            call = stmt.value
+            callee = project.callee_of(call)
+            is_async = callee is not None and callee.is_async
+            if not is_async and isinstance(call.func, ast.Name):
+                is_async = call.func.id in info.local_async
+            if is_async:
+                name = callee.name if callee else _leaf(call.func)
+                ctx.add(call, "FL503",
+                        f"coroutine '{name}' constructed but never awaited "
+                        "or scheduled — the body will not run; await it or "
+                        "wrap in asyncio.create_task")
+
+
+# --------------------------------------------------------------------- FL504
+def _is_sentinel_arg(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and node.value is None:
+        return True
+    leaf = _leaf(node)
+    return bool(leaf and SENTINEL_NAME_RE.search(leaf))
+
+
+def _queue_puts(fn: ast.AST):
+    """Yield (call, receiver_leaf, is_sentinel, innermost_while) puts."""
+    def walk(node: ast.AST, loop: Optional[ast.While]):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            inner = child if isinstance(child, ast.While) else loop
+            if (isinstance(child, ast.Call)
+                    and isinstance(child.func, ast.Attribute)
+                    and child.func.attr in ("put_nowait", "put")
+                    and child.args):
+                recv = _leaf(child.func.value)
+                if recv is not None:
+                    yield (child, recv, _is_sentinel_arg(child.args[0]), loop)
+            yield from walk(child, inner)
+
+    yield from walk(fn, None)
+
+
+def _check_sentinels(ctx, project) -> None:
+    if not _is_gateway(ctx.path):
+        return
+    # pair data puts with sentinel puts at class scope: the producer and the
+    # terminal path are usually different methods of the same object
+    groups: Dict[Optional[str], Dict[str, dict]] = {}
+    for info in project.infos_in(ctx.path):
+        for call, recv, sentinel, loop in _queue_puts(info.node):
+            rec = groups.setdefault(info.cls, {}).setdefault(
+                recv, {"data": [], "sentinel": []}
+            )
+            kind = "sentinel" if sentinel else "data"
+            rec[kind].append((info, call, loop))
+    for recvs in groups.values():
+        for recv, rec in recvs.items():
+            if rec["data"] and not rec["sentinel"]:
+                info, call, _ = rec["data"][0]
+                ctx.add(call, "FL504",
+                        f"queue '{recv}' receives stream items but no "
+                        "END sentinel is ever put — consumers block "
+                        "forever; put the sentinel on every terminal path")
+                continue
+            # sentinel inside the same while-loop as a data put: not
+            # exactly-once (it can fire per iteration)
+            data_loops = {id(loop) for _, _, loop in rec["data"]
+                          if loop is not None}
+            for _, call, loop in rec["sentinel"]:
+                if loop is not None and id(loop) in data_loops:
+                    ctx.add(call, "FL504",
+                            f"END sentinel for queue '{recv}' is put inside "
+                            "the data loop — it can fire more than once; "
+                            "move it after the loop or into finally")
+
+
+def check_fl5(ctx) -> None:
+    project = getattr(ctx, "project", None)
+    if project is None:
+        return
+    _check_coroutines(ctx, project)
+    _check_unawaited(ctx, project)
+    _check_sentinels(ctx, project)

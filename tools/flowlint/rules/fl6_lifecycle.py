@@ -1,0 +1,456 @@
+"""FL6 — resource lifecycle.
+
+Motivated by the paged-KV pool (PR 7) and the bug classes PR 9 fixed by
+hand: a disconnect path that forgot to free KV pages, and tick-0 timestamps
+(``Optional[float] = None`` where ``0.0`` is a real measurement) guarded by
+truthiness.  These rules mechanize both.
+
+* FL601 — a page/slot acquire (``allocate``/``allocate_sequence``/
+  ``acquire``) whose result reaches some exit path without being released,
+  stored, returned, or otherwise consumed — computed on a per-function path
+  walk with try/finally and early-return handling.  Any *use* of the
+  resource counts as consumption (ownership transfer is fine; silently
+  dropping pages on an early return is the leak).
+* FL602 — ``ref_count += 1`` in a class with no ``ref_count -= 1`` anywhere:
+  an incref without a paired decref can only leak.
+* FL603 — terminal-state assignment (FINISHED/CANCELLED/FAILED) reachable
+  twice on one path: the second write clobbers the first terminal record.
+* FL604 — an ``Optional[int]``/``Optional[float]`` annotated value with a
+  stamp-shaped name (``t_*``, ``*_time``, ``*_tick*``, ``*_stamp``,
+  ``deadline``) compared by truthiness (``if x:`` / ``not x`` / ``x or
+  ...``) instead of ``is not None`` — tick 0 / 0.0 is falsy but real.
+  Driven by the project-wide annotation index; config knobs
+  (``max_context`` etc.) are deliberately out of scope since 0-means-off
+  truthiness is idiomatic there.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+ACQUIRE_LEAVES = {"allocate", "allocate_fresh", "allocate_sequence",
+                  "acquire"}
+TERMINAL_STATES = {"FINISHED", "CANCELLED", "FAILED"}
+STATE_ATTRS = {"status", "state"}
+#: FL604 targets STAMP-shaped names (t_first_token, arrival_time,
+#: deadline_ticks...).  Optional[int] CONFIG knobs (max_context,
+#: prefill_chunk) legitimately treat 0 and None alike, so a bare
+#: annotation match would cry wolf all over the tree.
+STAMP_NAME_RE = re.compile(
+    r"(^t_)|(^|_)(time|tick|ticks|stamp|stamps|deadline)(_|$)", re.I
+)
+
+
+def _leaf(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _functions(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _expr_text(node: ast.AST) -> Optional[str]:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return None
+
+
+# ======================================================================
+# FL601 — acquire without release/consumption on some exit path
+# ======================================================================
+
+class _LeakWalker:
+    """Path-sensitive liveness of acquired resources.
+
+    State: ``live`` maps local name -> acquire call node.  ANY later load of
+    the name (release call, store, return, append, argument pass) consumes
+    it — ownership moved somewhere that can free it.  A ``return`` or
+    fall-off-the-end with the name still live is a leak on that path.
+    Branch merge keeps a resource live only if it is live on EVERY
+    continuing branch (released-in-any wins: precision over recall).
+    ``finally`` bodies apply to every exit passing through the try.
+    """
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.reported: Set[int] = set()
+        # names a surrounding finally will consume — exits inside that try
+        # are covered even though the release is lexically after them
+        self._shield: Set[str] = set()
+
+    # -- events ------------------------------------------------------------
+    def _acquires_in(self, stmt: ast.stmt) -> List[Tuple[str, ast.Call]]:
+        out = []
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            leaf = _leaf(stmt.value.func)
+            if leaf in ACQUIRE_LEAVES and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                out.append((stmt.targets[0].id, stmt.value))
+        return out
+
+    def _uses_in(self, node: ast.AST, skip: Optional[ast.AST] = None
+                 ) -> Set[str]:
+        used: Set[str] = set()
+        for n in ast.walk(node):
+            if n is skip:
+                continue
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                used.add(n.id)
+        return used
+
+    def _report(self, live: Dict[str, ast.Call], where: ast.AST,
+                kind: str) -> None:
+        for name, acq in live.items():
+            if id(acq) in self.reported or name in self._shield:
+                continue
+            self.reported.add(id(acq))
+            line = getattr(where, "lineno", "?")
+            self.ctx.add(
+                acq, "FL601",
+                f"'{name}' acquired here but neither released nor consumed "
+                f"on the exit path at line {line} — pages/slots leak; "
+                "free on every exit (try/finally) or hand ownership off "
+                "before returning",
+            )
+
+    # -- walking -----------------------------------------------------------
+    def run(self, fn: ast.AST) -> None:
+        final = self._block(list(fn.body), {})
+        if final is not None and final:
+            self._report(final, fn, "fall-through")
+
+    def _block(self, body: List[ast.stmt], live: Dict[str, ast.Call]
+               ) -> Optional[Dict[str, ast.Call]]:
+        """Walk a block; return the fall-through state, or None if every
+        path through the block terminates (return/raise/continue/break)."""
+        live = dict(live)
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.Return):
+                if stmt.value is not None:
+                    for name in self._uses_in(stmt.value):
+                        live.pop(name, None)
+                if live:
+                    self._report(live, stmt, "return")
+                return None
+            if isinstance(stmt, (ast.Raise, ast.Continue, ast.Break)):
+                # raise/continue/break paths are not reported: the resource
+                # may be freed by an outer handler or the next iteration
+                return None
+            if isinstance(stmt, ast.If):
+                # a guard that names the resource (``if alloc is None:
+                # return``) is the acquire-failed path — the name in the
+                # test counts as consumption so the early return is clean
+                for name in self._uses_in(stmt.test):
+                    live.pop(name, None)
+                then = self._block(stmt.body, live)
+                other = self._block(stmt.orelse, live)
+                merged = self._merge(then, other)
+                if merged is None:
+                    return None
+                live = merged
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                header = stmt.iter if isinstance(
+                    stmt, (ast.For, ast.AsyncFor)) else stmt.test
+                for name in self._uses_in(header):
+                    live.pop(name, None)
+                after = self._block(stmt.body, live)
+                live = self._merge(live, after) or dict(live)
+                tail = self._block(stmt.orelse, live)
+                if tail is None:
+                    return None
+                live = tail
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    for name in self._uses_in(item.context_expr):
+                        live.pop(name, None)
+                after = self._block(stmt.body, live)
+                if after is None:
+                    return None
+                live = after
+                continue
+            if isinstance(stmt, ast.Try):
+                live = self._try(stmt, live)
+                if live is None:
+                    return None
+                continue
+            # simple statement: uses consume, acquires add
+            acquires = self._acquires_in(stmt)
+            skip = acquires[0][1] if acquires else None
+            for name in self._uses_in(stmt, skip=skip):
+                live.pop(name, None)
+            for tgt in _assigned_names(stmt):
+                live.pop(tgt, None)   # rebinding drops tracking
+            for name, call in acquires:
+                live[name] = call
+        return live
+
+    def _try(self, stmt: ast.Try, live: Dict[str, ast.Call]
+             ) -> Optional[Dict[str, ast.Call]]:
+        # a release in ``finally`` covers EVERY exit through the try — the
+        # blessed pattern.  Shield those names while walking the body so
+        # early returns inside don't report them, then run finally's own
+        # consumption on the merged fall-through state.
+        fin_uses = {
+            n.id for n in ast.walk(
+                ast.Module(body=list(stmt.finalbody), type_ignores=[]))
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+        }
+        saved = set(self._shield)
+        self._shield |= fin_uses
+        try:
+            after_body = self._block(stmt.body, live)
+            results = [after_body]
+            for handler in stmt.handlers:
+                results.append(self._block(handler.body, live))
+            if after_body is not None and stmt.orelse:
+                results[0] = self._block(stmt.orelse, after_body)
+        finally:
+            self._shield = saved
+        merged: Optional[Dict[str, ast.Call]] = None
+        for r in results:
+            merged = self._merge(merged, r)  # None is identity (dead path)
+        if merged is None:
+            return None
+        return self._block(stmt.finalbody, merged)
+
+    @staticmethod
+    def _merge(a: Optional[Dict[str, ast.Call]],
+               b: Optional[Dict[str, ast.Call]]
+               ) -> Optional[Dict[str, ast.Call]]:
+        if a is None:
+            return dict(b) if b is not None else None
+        if b is None:
+            return dict(a)
+        return {k: v for k, v in a.items() if k in b}
+
+
+def _assigned_names(stmt: ast.stmt) -> Set[str]:
+    names: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    stack = list(targets)
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        elif isinstance(t, ast.Name):
+            names.add(t.id)
+    return names
+
+
+def _check_fl601(ctx) -> None:
+    for fn in _functions(ctx.tree):
+        has_acquire = any(
+            isinstance(n, ast.Call) and _leaf(n.func) in ACQUIRE_LEAVES
+            for n in ast.walk(fn)
+        )
+        if has_acquire:
+            _LeakWalker(ctx).run(fn)
+
+
+# ======================================================================
+# FL602 — incref without any decref in the class
+# ======================================================================
+
+REFCOUNT_ATTRS = {"ref_count", "refcount", "refs"}
+
+
+def _check_fl602(ctx) -> None:
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        increfs: List[ast.AST] = []
+        has_decref = False
+        for node in ast.walk(cls):
+            if isinstance(node, ast.AugAssign) and isinstance(
+                node.target, ast.Attribute
+            ) and node.target.attr in REFCOUNT_ATTRS:
+                if isinstance(node.op, ast.Add):
+                    increfs.append(node)
+                elif isinstance(node.op, ast.Sub):
+                    has_decref = True
+        if increfs and not has_decref:
+            for node in increfs:
+                ctx.add(node, "FL602",
+                        f"refcount increment in class '{cls.name}' with no "
+                        "decrement anywhere in the class — shared pages can "
+                        "only leak; pair every incref with a decref path")
+
+
+# ======================================================================
+# FL603 — terminal state assigned twice on one path
+# ======================================================================
+
+def _terminal_assign(stmt: ast.stmt) -> Optional[Tuple[str, str]]:
+    """(target_key, state_name) for ``x.status = Enum.FINISHED`` shapes."""
+    if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+        return None
+    tgt = stmt.targets[0]
+    if not (isinstance(tgt, ast.Attribute) and tgt.attr in STATE_ATTRS):
+        return None
+    val_leaf = _leaf(stmt.value)
+    if val_leaf not in TERMINAL_STATES:
+        return None
+    key = _expr_text(tgt)
+    return (key, val_leaf) if key else None
+
+
+class _TerminalWalker:
+    """Union path walk: a state assign is flagged if SOME path reaches a
+    second terminal assign to the same target."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    def run(self, fn: ast.AST) -> None:
+        self._block(list(fn.body), {})
+
+    def _block(self, body: List[ast.stmt], seen: Dict[str, ast.stmt]
+               ) -> Optional[Dict[str, ast.stmt]]:
+        seen = dict(seen)
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, (ast.Return, ast.Raise, ast.Continue,
+                                 ast.Break)):
+                return None
+            hit = _terminal_assign(stmt)
+            if hit is not None:
+                key, state = hit
+                if key in seen:
+                    self.ctx.add(
+                        stmt, "FL603",
+                        f"terminal state {state} assigned to '{key}' but a "
+                        f"terminal state was already set on this path (line "
+                        f"{seen[key].lineno}) — exactly-once terminal "
+                        "transitions; guard with an is-terminal check",
+                    )
+                seen[key] = stmt
+                continue
+            if isinstance(stmt, ast.If):
+                then = self._block(stmt.body, seen)
+                other = self._block(stmt.orelse, seen)
+                if then is None and other is None:
+                    return None
+                merged = dict(then or {})
+                merged.update(other or {})
+                seen = merged
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                self._block(stmt.body, {})   # fresh per-iteration object
+                tail = self._block(stmt.orelse, seen)
+                if tail is None:
+                    return None
+                seen = tail
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                after = self._block(stmt.body, seen)
+                if after is None:
+                    return None
+                seen = after
+                continue
+            if isinstance(stmt, ast.Try):
+                after = self._block(stmt.body, seen)
+                for handler in stmt.handlers:
+                    h = self._block(handler.body, seen)
+                    if h is not None:
+                        after = dict(after or {})
+                        after.update(h)
+                if after is None:
+                    return None
+                fin = self._block(stmt.finalbody, after)
+                if fin is None:
+                    return None
+                seen = fin
+                continue
+        return seen
+
+
+def _check_fl603(ctx) -> None:
+    for fn in _functions(ctx.tree):
+        _TerminalWalker(ctx).run(fn)
+
+
+# ======================================================================
+# FL604 — Optional[int/float] compared by truthiness
+# ======================================================================
+
+def _truthiness_roots(expr: ast.AST):
+    """Name/Attribute nodes whose truthiness the expression tests."""
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        yield expr
+    elif isinstance(expr, ast.BoolOp):
+        for v in expr.values:
+            yield from _truthiness_roots(v)
+    elif isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.Not):
+        yield from _truthiness_roots(expr.operand)
+
+
+def _check_fl604(ctx) -> None:
+    project = getattr(ctx, "project", None)
+    attrs = project.optional_numeric_attrs if project else set()
+    from tools.flowlint.project import is_optional_numeric
+
+    for fn in _functions(ctx.tree):
+        local: set = set()
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if is_optional_numeric(a.annotation):
+                local.add(a.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name
+            ) and is_optional_numeric(node.annotation):
+                local.add(node.target.id)
+        tests: List[ast.AST] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                tests.append(node.test)
+            elif isinstance(node, ast.Assert):
+                tests.append(node.test)
+            elif isinstance(node, ast.comprehension):
+                tests.extend(node.ifs)
+            elif isinstance(node, ast.BoolOp):
+                tests.append(node)
+        seen: Set[int] = set()
+        for test in tests:
+            for root in _truthiness_roots(test):
+                if id(root) in seen:
+                    continue
+                seen.add(id(root))
+                name = None
+                if isinstance(root, ast.Name) and root.id in local:
+                    name = root.id
+                elif isinstance(root, ast.Attribute) and root.attr in attrs:
+                    name = root.attr
+                if name is not None and STAMP_NAME_RE.search(name):
+                    ctx.add(
+                        root, "FL604",
+                        f"'{name}' is Optional[int/float] but compared by "
+                        "truthiness — tick 0 / 0.0 is falsy yet a real "
+                        "measurement; use 'is not None'",
+                    )
+
+
+def check_fl6(ctx) -> None:
+    _check_fl601(ctx)
+    _check_fl602(ctx)
+    _check_fl603(ctx)
+    _check_fl604(ctx)
